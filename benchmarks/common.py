@@ -1,0 +1,71 @@
+"""Shared helpers for the benchmark suite.
+
+Every benchmark prints ``name,value,derived`` CSV rows through ``emit`` and
+returns a list of those rows so benchmarks.run can aggregate them into
+bench_output.txt / EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import make_policy
+from repro.simcluster.papermodels import PAPER_MODELS
+from repro.simcluster.sim import ClusterSim, ClusterSpec, ParallelismSpec
+from repro.simcluster.trace import WORKLOADS, generate_trace
+
+__all__ = ["emit", "run_sim", "spec_for", "POLICIES", "PAPER_MODELS"]
+
+POLICIES = ("fs", "sjf", "edf", "karuna", "mfs")
+
+
+def emit(rows: List[str], name: str, value, derived: str = "") -> None:
+    line = f"{name},{value},{derived}"
+    rows.append(line)
+    print(line, flush=True)
+
+
+def spec_for(model: str, *, mode: str = "ep", tp: int = 1, ep: int = 8,
+             sp: int = 1, n_units: int = 2, **kw) -> ClusterSpec:
+    par = ParallelismSpec(mode=mode, tp=tp, ep=ep, sp=sp)
+    return ClusterSpec(model=PAPER_MODELS[model], par=par, n_units=n_units,
+                       **kw)
+
+
+def run_sim(policy: str, spec: ClusterSpec, workload: str, *, n: int = 96,
+            rps: float = 8.0, seed: int = 0, warmup: int = 16,
+            contention_free: bool = False) -> Dict:
+    trace = generate_trace(WORKLOADS[workload], n_requests=n, rps=rps,
+                           seed=seed, warmup=warmup)
+    sim = ClusterSim(spec, make_policy(policy), seed=seed,
+                     contention_free=contention_free)
+    return sim.run(trace).summary()
+
+
+def calibrate_rate(spec: ClusterSpec, workload: str, *, target: float = 0.6,
+                   policy: str = "fs", n: int = 64, lo: float = 0.25,
+                   hi: float = 128.0, iters: int = 7) -> float:
+    """Request rate where ``policy`` lands near ``target`` attainment —
+    the contended-but-not-collapsed regime every paper figure lives in
+    (attainment curves are only informative on their falling edge)."""
+    for _ in range(iters):
+        mid = (lo * hi) ** 0.5
+        att = run_sim(policy, spec, workload, n=n, rps=mid)["slo_attainment"]
+        if att > target:
+            lo = mid
+        else:
+            hi = mid
+        if hi / lo < 1.15:
+            break
+    return (lo * hi) ** 0.5
+
+
+def sustained_rate(policy: str, spec: ClusterSpec, workload: str,
+                   rates: Sequence[float], results: Dict[float, Dict[str, Dict]],
+                   floor: float = 0.9) -> float:
+    """Highest evaluated rate whose attainment stays >= floor."""
+    best = 0.0
+    for r in sorted(rates):
+        if results[r][policy]["slo_attainment"] >= floor:
+            best = r
+    return best

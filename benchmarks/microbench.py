@@ -1,0 +1,52 @@
+"""Fig 6 / Fig 7 / Table 1-2 — the didactic single-link scenarios, measured
+(not asserted): layer-unblock times per policy and the inter-request
+deadline/earliness outcome."""
+from __future__ import annotations
+
+from repro.core import MFSScheduler, Stage, make_policy
+from repro.netsim.toy import make_flow, run_toy
+
+from .common import emit
+
+
+def _fig(rows, tag, coll_size, p2d_size):
+    for pol in ("fs", "sjf", "edf"):
+        coll = make_flow(Stage.COLLECTIVE, size=coll_size)
+        p2d = make_flow(Stage.P2D, size=p2d_size, deadline=10.0)
+        finish = run_toy([coll, p2d], make_policy(pol))
+        emit(rows, f"{tag}.{pol}.layer_unblock_T", f"{finish[coll.fid]:.2f}")
+    coll = make_flow(Stage.COLLECTIVE, size=coll_size)
+    p2d = make_flow(Stage.P2D, size=p2d_size, deadline=10.0)
+    finish = run_toy([coll, p2d], MFSScheduler())
+    emit(rows, f"{tag}.mfs.layer_unblock_T", f"{finish[coll.fid]:.2f}",
+         "defer-and-promote")
+
+
+_TABLE1 = {"A": (2.0, 9.0, 18.0), "B": (4.0, 6.0, 12.0), "C": (3.0, 0.0, 7.0)}
+
+
+def main(quick: bool = False):
+    rows = []
+    _fig(rows, "fig6_ingress", coll_size=2.0, p2d_size=1.0)   # T=3 -> T=2
+    _fig(rows, "fig7_egress", coll_size=3.0, p2d_size=1.0)    # T=4 -> T=3
+
+    for pol in ("fs", "sjf", "edf", "karuna", "mfs"):
+        flows = {}
+        for i, (nm, (size, remain, dr)) in enumerate(_TABLE1.items()):
+            dl = (dr - remain) if pol == "mfs" else dr
+            flows[nm] = make_flow(Stage.P2D, size=size, deadline=dl, rid=i)
+        policy = MFSScheduler() if pol == "mfs" else make_policy(pol)
+        finish = run_toy(list(flows.values()), policy)
+        done = {nm: finish[f.fid] + _TABLE1[nm][1] for nm, f in flows.items()}
+        missed = sorted(nm for nm, t in done.items()
+                        if t > _TABLE1[nm][2] + 1e-6)
+        earliness = sum(max(0.0, _TABLE1[nm][2] - t)
+                        for nm, t in done.items())
+        emit(rows, f"table2.{pol}.deadline_misses",
+             "+".join(missed) if missed else "none",
+             f"pos_earliness={earliness:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""Roofline analysis (§g) — derives the three roofline terms per
+(arch x shape) cell from the dry-run's compiled artifacts.
+
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes / HBM_bw               (per chip)
+    collective term = collective_bytes / link_bw       (per chip)
+
+Sources: ``compiled.cost_analysis()`` (flops / bytes accessed) and the
+partitioned-HLO collective parse, both recorded by repro.launch.dryrun.
+The SPMD module IS the per-chip program, so no further division by chips.
+The dry-run is run with ``--unroll`` for this table: XLA's cost analysis
+counts a ``scan`` body once regardless of trip count, so only unrolled
+lowering yields exact per-step counts.
+
+Hardware constants (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI.
+
+Reported per cell: all three terms (seconds), the dominant term,
+MODEL_FLOPS (6ND train / 2ND prefill / 2N/token decode), the useful-compute
+ratio MODEL_FLOPS / (HLO_FLOPs x chips), and a rule-generated note on what
+would move the dominant term.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from .common import emit
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def load_dryrun(out_dir: str = "experiments",
+                mesh: str = "single_pod_16x16") -> List[Dict]:
+    """Prefer the unrolled (exact-count) record, then the optimized scan
+    record, then the baseline scan one."""
+    for tag in ("_unroll", "_opt", ""):
+        path = os.path.join(out_dir, f"dryrun_{mesh}{tag}.json")
+        if os.path.exists(path):
+            with open(path) as f:
+                return json.load(f)
+    raise FileNotFoundError(
+        f"no dryrun json for mesh {mesh} in {out_dir}; run "
+        "`python -m repro.launch.dryrun --mesh single --unroll`")
+
+
+def terms(rec: Dict, chips: int = 256) -> Optional[Dict]:
+    if rec["status"] != "ok":
+        return None
+    ca = rec.get("cost_analysis", {})
+    flops = ca.get("flops", -1.0)
+    bts = ca.get("bytes_accessed", -1.0)
+    coll = rec["collectives"]["total_bytes"]
+    t_c = flops / PEAK_FLOPS
+    t_m = bts / HBM_BW
+    t_n = coll / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_n),
+              key=lambda kv: kv[1])[0]
+    model_fl = rec.get("model_flops", 0.0)
+    ratio = model_fl / max(flops * chips, 1e-9)
+    note = {
+        "compute": ("compute-bound: raise useful-FLOP ratio (less remat "
+                    "recompute / padding) or grow per-chip batch"),
+        "memory": ("HBM-bound: shrink resident/streamed bytes — fused or "
+                   "chunked loss, tighter activation policy, int8 KV, "
+                   "no KV-head expansion"),
+        "collective": ("collective-bound: reshard to cut gather/scatter "
+                       "volume, overlap collectives with compute, or move "
+                       "the collective to a cheaper axis"),
+    }[dom]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+        "bound": dom, "model_flops": model_fl,
+        "useful_ratio": ratio, "note": note,
+        "collective_breakdown": {
+            k: v for k, v in rec["collectives"].items()
+            if isinstance(v, dict) and v["count"] > 0},
+        "args_gb_per_dev": rec.get("memory_analysis", {}).get(
+            "argument_size_in_bytes", 0) / 1e9,
+        "temp_gb_per_dev": rec.get("memory_analysis", {}).get(
+            "temp_size_in_bytes", 0) / 1e9,
+    }
+
+
+def main(quick: bool = False, out_dir: str = "experiments"):
+    rows = []
+    recs = load_dryrun(out_dir)
+    table = []
+    for rec in recs:
+        t = terms(rec)
+        if t is None:
+            continue
+        table.append(t)
+        frac = t["useful_ratio"]
+        emit(rows,
+             f"roofline.{t['arch']}.{t['shape']}",
+             f"{max(t['compute_s'], t['memory_s'], t['collective_s']):.4f}s",
+             f"bound={t['bound']} compute={t['compute_s']:.4f}s "
+             f"memory={t['memory_s']:.4f}s coll={t['collective_s']:.4f}s "
+             f"useful={frac:.2f}")
+    with open(os.path.join(out_dir, "roofline.json"), "w") as f:
+        json.dump(table, f, indent=1)
+    # headline: worst cells per bound class
+    for bound in ("compute", "memory", "collective"):
+        cells = [t for t in table if t["bound"] == bound]
+        if cells:
+            worst = max(cells, key=lambda t: max(
+                t["compute_s"], t["memory_s"], t["collective_s"]))
+            emit(rows, f"roofline.worst_{bound}_bound",
+                 f"{worst['arch']}/{worst['shape']}", worst["note"])
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only fig9 ...]
+
+Each module prints ``name,value,derived`` CSV rows; this driver aggregates
+them with wall-clock timings per suite.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+SUITES = [
+    ("fig5_contention", "benchmarks.contention"),
+    ("fig6_7_table2_micro", "benchmarks.microbench"),
+    ("fig9_testbed", "benchmarks.testbed"),
+    ("fig10_11_sim_moe", "benchmarks.sim_moe"),
+    ("fig12_sim_sp", "benchmarks.sim_sp"),
+    ("fig13_14_breakdown", "benchmarks.breakdown"),
+    ("roofline", "benchmarks.roofline"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+
+    print("suite,name,value,derived")
+    failures = []
+    for tag, modname in SUITES:
+        if args.only and not any(o in tag for o in args.only):
+            continue
+        t0 = time.time()
+        print(f"# === {tag} ({modname}) ===", flush=True)
+        try:
+            mod = __import__(modname, fromlist=["main"])
+            mod.main(quick=args.quick)
+            print(f"# {tag} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception as e:
+            failures.append(tag)
+            print(f"# {tag} FAILED: {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark suites failed: {failures}")
+    print("# all benchmark suites completed", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""End-to-end driver — disaggregated serving with batched requests.
+
+Runs a REAL reduced SmolLM on CPU behind the DisaggServer orchestrator:
+prefix-cache reuse (Stage 1), per-layer-group P2D transfers with TTFT
+deadlines (Stage 3), every transfer scheduled through the pluggable policy
+(MFS by default), decode via slotted continuous batching. Compares SLO
+attainment across policies on the same request stream.
+
+    PYTHONPATH=src python examples/serve_disagg.py [--requests 16]
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import SMOKES
+from repro.core import make_policy
+from repro.models.lm import build_model
+from repro.serving import DisaggConfig, DisaggServer, ServeRequest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = SMOKES[args.arch]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(args.seed))
+    rng = np.random.default_rng(args.seed)
+
+    # agent-style stream: hot shared prefixes + fresh suffixes
+    prefixes = [rng.integers(0, cfg.vocab, size=(32,)) for _ in range(3)]
+    reqs = []
+    for i in range(args.requests):
+        if rng.uniform() < 0.6:
+            toks = np.concatenate([prefixes[rng.integers(3)],
+                                   rng.integers(0, cfg.vocab, size=(12,))])
+        else:
+            toks = rng.integers(0, cfg.vocab, size=(44,))
+        reqs.append(ServeRequest(rid=i, arrival=i * 2e-4, tokens=toks,
+                                 max_new=4))
+
+    for pol in ("mfs", "fs", "edf", "karuna"):
+        srv = DisaggServer(model, params, policy=make_policy(pol),
+                           cfg=DisaggConfig(n_prefill_units=2, n_pages=512))
+        res = srv.serve(reqs)
+        slo = sum(r.met_slo for r in res) / len(res)
+        reuse = sum(r.reused_tokens for r in res)
+        mean_ttft = np.mean([r.ttft for r in res]) * 1e3
+        print(f"{pol:8s} SLO={slo:6.1%}  mean TTFT={mean_ttft:7.3f} ms  "
+              f"reused {reuse} tokens across {len(res)} requests")
+    sample = res[0]
+    print(f"\nsample completion rid={sample.rid}: first_token="
+          f"{sample.first_token} continuation={sample.tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""repro.configs — assigned architectures (exact public configs + reduced
+smoke variants) and the shape-cell matrix."""
+from .base import ArchConfig, ShapeCell, SHAPES
+from . import (qwen1_5_32b, minitron_8b, starcoder2_3b, smollm_360m,
+               recurrentgemma_9b, deepseek_moe_16b, deepseek_v3_671b,
+               mamba2_1_3b, qwen2_vl_7b, seamless_m4t_medium)
+
+ARCHS = {
+    m.CONFIG.name: m.CONFIG
+    for m in (qwen1_5_32b, minitron_8b, starcoder2_3b, smollm_360m,
+              recurrentgemma_9b, deepseek_moe_16b, deepseek_v3_671b,
+              mamba2_1_3b, qwen2_vl_7b, seamless_m4t_medium)
+}
+SMOKES = {
+    m.CONFIG.name: m.SMOKE
+    for m in (qwen1_5_32b, minitron_8b, starcoder2_3b, smollm_360m,
+              recurrentgemma_9b, deepseek_moe_16b, deepseek_v3_671b,
+              mamba2_1_3b, qwen2_vl_7b, seamless_m4t_medium)
+}
+
+
+def get_arch(name: str) -> ArchConfig:
+    if name in ARCHS:
+        return ARCHS[name]
+    from ..simcluster.papermodels import PAPER_MODELS
+    if name in PAPER_MODELS:
+        return PAPER_MODELS[name]
+    raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+
+
+__all__ = ["ArchConfig", "ShapeCell", "SHAPES", "ARCHS", "SMOKES", "get_arch"]

@@ -1,0 +1,39 @@
+"""repro.core — the paper's contribution: MFS multi-stage flow scheduling.
+
+Public surface:
+    Stage, Flow, Coflow            — MsFlow abstraction (§3.1)
+    MLUConfig, mlu, mlu_level      — explicit-deadline urgency (§4.3)
+    rli_level                      — implicit-deadline urgency (§4.4.1)
+    RMLQ                           — Reverse Multi-Level Queue (§4.2)
+    red_score, sort_by_red         — Robust Effective Deadline (§4.4.2)
+    inter_request_schedule         — Algorithm 1 (Appendix B)
+    MFSScheduler                   — the full arbiter (§4.5)
+    FairShare, SJF, EDF, Karuna    — baselines (§6.3), LLFOracle ceiling
+"""
+from .msflow import Stage, Flow, Coflow, FlowState, new_flow_id
+from .urgency import MLUConfig, mlu, mlu_level, geometric_thresholds, rli_level
+from .rmlq import RMLQ
+from .red import red_score, partition_by_max_gap, sort_by_red, BatchRef
+from .feasibility import BatchLoad, InterSchedule, inter_request_schedule
+from .policies import (
+    Policy,
+    SchedView,
+    FairShare,
+    SJF,
+    EDF,
+    Karuna,
+    LLFOracle,
+    make_policy,
+)
+from .arbiter import MFSScheduler
+
+__all__ = [
+    "Stage", "Flow", "Coflow", "FlowState", "new_flow_id",
+    "MLUConfig", "mlu", "mlu_level", "geometric_thresholds", "rli_level",
+    "RMLQ",
+    "red_score", "partition_by_max_gap", "sort_by_red", "BatchRef",
+    "BatchLoad", "InterSchedule", "inter_request_schedule",
+    "Policy", "SchedView",
+    "FairShare", "SJF", "EDF", "Karuna", "LLFOracle", "make_policy",
+    "MFSScheduler",
+]

@@ -1,0 +1,119 @@
+"""MFS — the full Defer-and-Promote arbiter over the RMLQ substrate (§4.5).
+
+Per-stage rules
+---------------
+* Stage 3 (P2D, explicit deadline): initial level and promotions come from the
+  MLU geometric ladder (§4.3). Levels are re-evaluated at *layer boundaries*
+  while the owning request is still computing, then at *periodic ticks* once
+  computation has finished. Promotion is monotone and message-atomic.
+* Stage 1 (KV reuse, implicit deadline): initial level = rli_level(RLI); as
+  the compute front L_curr advances the RLI shrinks, promoting the flow
+  "incrementally at layer boundaries to align with computation progress".
+* Stage 2 (collectives, implicit deadline): RLI = 0 by construction — they
+  block the next computation step — so they enter the top of the implicit
+  band (level 2) directly.
+
+Arbitration (§4.5)
+------------------
+Level 1 is reserved for critical explicit-deadline flows (MLU >= U). Within
+each remaining level, early-stage (implicit-deadline) flows take precedence
+over last-stage flows so deferred P2D traffic only opportunistically uses
+bandwidth; ties among early-stage flows with equal RLI follow the RED rank
+sigma from the inter-request scheduler (§4.4.2). Equal keys share bandwidth
+max-min fairly, which also spreads a coflow's members evenly.
+
+Priority-key layout (lexicographic, smaller = more urgent):
+
+    (level, band, red_rank)
+      level    1..K from the RMLQ, K+1 = scavenger
+      band     0 = early-stage (Stages 1-2), 1 = last-stage (Stage 3)
+      red_rank rank of the owning batch in sigma (0 when unused)
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+from .msflow import Flow, FlowState, Stage
+from .policies import Policy, SchedView
+from .rmlq import RMLQ
+from .urgency import MLUConfig, mlu, mlu_level, rli_level
+
+__all__ = ["MFSScheduler"]
+
+
+class MFSScheduler(Policy):
+    name = "mfs"
+    uses_inter_request = True
+
+    def __init__(self, cfg: MLUConfig = MLUConfig(), tick_interval: float = 2e-3):
+        self.cfg = cfg
+        #: periodic MLU re-evaluation pitch once a request finished computing
+        self.tick_interval = tick_interval
+        self.rmlq = RMLQ(cfg)
+
+    # ------------------------------------------------------------ admission
+    def on_flow_submitted(self, flow: Flow, view: SchedView) -> None:
+        self.rmlq.insert(flow, self._target_level(flow, view))
+
+    def on_flow_completed(self, flow: Flow, view: SchedView) -> None:
+        self.rmlq.remove(flow)
+
+    def reset(self) -> None:
+        self.rmlq = RMLQ(self.cfg)
+
+    # ------------------------------------------------------------ promotion
+    def _target_level(self, flow: Flow, view: SchedView) -> int:
+        if flow.stage == Stage.P2D:
+            lvl = min(flow.level, self.cfg.K)
+            try:
+                cap, rho = view.mlu_inputs(flow, lvl)
+            except (AttributeError, NotImplementedError):
+                cap, rho = view.bottleneck(flow)
+            u = mlu(flow.remaining, flow.deadline - view.now, cap, rho)
+            return mlu_level(u, self.cfg)
+        if flow.stage == Stage.COLLECTIVE:
+            return 2                       # RLI = 0: top of the implicit band
+        rli = max(0, flow.target_layer - view.l_curr(flow.unit))
+        return rli_level(rli, self.cfg)
+
+    def assign(self, flows: Sequence[Flow], view: SchedView,
+               trigger: Tuple = ("event",)) -> None:
+        kind = trigger[0]
+        unit = trigger[1] if len(trigger) > 1 else None
+        for f in flows:
+            if f.state == FlowState.PRUNED:
+                # Scavenger class: opportunistic leftovers only (Appendix B
+                # "soft enforcement"); strict-priority water-filling hands it
+                # whatever the admitted classes leave on the table.
+                f.priority_key = (self.cfg.K + 1, 1, 0)
+                f.rate_cap = None
+                continue
+            if f not in self.rmlq:          # e.g. re-admitted after pruning
+                self.rmlq.insert(f, self._target_level(f, view))
+            if self._should_reevaluate(f, view, kind, unit):
+                self.rmlq.promote(f, self._target_level(f, view))
+            band = 1 if f.stage == Stage.P2D else 0
+            red = view.red_rank(f.rid)
+            f.priority_key = (f.level, band, red)
+            f.rate_cap = None
+
+    def _should_reevaluate(self, f: Flow, view: SchedView,
+                           kind: str, unit: Optional[int]) -> bool:
+        if kind == "submit":
+            return False                    # level was just computed
+        if f.stage == Stage.P2D:
+            if view.computing(f.rid):
+                # layer-boundary granularity while computing (C-1: priority
+                # atomicity at message level, no packet re-ordering)
+                return kind == "layer" and unit == f.unit
+            return kind == "tick"           # fixed-interval updates afterwards
+        if f.stage == Stage.KV_REUSE:
+            return kind == "layer" and unit == f.unit
+        return False                        # Stage 2 never moves (already top)
+
+    # ------------------------------------------------- overload-control hooks
+    def prune(self, flow: Flow) -> None:
+        self.rmlq.demote_to_scavenger(flow)
+
+    def readmit(self, flow: Flow, view: SchedView) -> None:
+        self.rmlq.readmit(flow, self._target_level(flow, view))

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the serving substrate's compute hot spots.
+
+Layout per the repo convention:
+  flash_attention.py / decode_attention.py / ssd_scan.py / rglru.py
+      — pl.pallas_call kernels with explicit BlockSpec VMEM tiling
+  ops.py — jit'd dispatching wrappers (Pallas on TPU, jnp elsewhere)
+  ref.py — pure-jnp oracles (semantics of record)
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

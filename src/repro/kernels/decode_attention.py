@@ -1,0 +1,125 @@
+"""Decode attention over a padded KV cache — Pallas TPU kernel.
+
+One new query token per sequence attends to its full cached context. The
+grid is ``(batch, S/block_k)`` with the KV dimension innermost (sequential
+on TPU); all heads of one sequence are processed together so the MXU sees
+an [H, Dp] x [Dp, block_k] matmul per step instead of H rank-1 products.
+
+BlockSpec tiling (per grid step, all VMEM):
+    q       : (1, H, Dp)
+    k/v     : (1, block_k, H, Dp)
+    lengths : (1, 1) int32        -- valid cache slots for this sequence
+    out     : (1, H, Dp)
+    scratch : acc (H, Dp) f32, m/l (H, 128) f32 (lane-broadcast)
+
+Blocks entirely beyond ``lengths[b]`` are compute-skipped.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["decode_attention"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, block_k: int):
+    j = pl.program_id(1)
+    nj = pl.num_programs(1)
+    length = len_ref[0, 0]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(j * block_k < length)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                    # [H, Dp]
+        k = k_ref[0].astype(jnp.float32)                    # [bk, H, Dp]
+        v = v_ref[0].astype(jnp.float32)
+        H = q.shape[0]
+        # [H, bk] logits: contract Dp, batch over H
+        s = jax.lax.dot_general(
+            q, jnp.swapaxes(k, 0, 1),                        # [H,Dp] x [H,bk,Dp]
+            (((1,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * scale
+        kpos = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (H, block_k), 1)
+        mask = kpos < length
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[:, :1]
+        l_prev = l_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.where(mask, jnp.exp(s - m_new), 0.0)         # [H, bk]
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = jnp.broadcast_to(
+            alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True), l_ref.shape)
+        # [H, Dp] update: contract bk, batch over H
+        pv = jax.lax.dot_general(
+            p, jnp.swapaxes(v, 0, 1),                        # [H,bk] x [H,bk,Dp]
+            (((1,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))
+def decode_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                     lengths: jnp.ndarray, *, scale: Optional[float] = None,
+                     block_k: int = 256,
+                     interpret: bool = False) -> jnp.ndarray:
+    """q: [B,H,D]; k/v: [B,S,H,D]; lengths: [B] int32."""
+    B, H, D = q.shape
+    S = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    block_k = min(block_k, max(128, S))
+
+    pad_d = (-D) % 128
+    pad_s = (-S) % block_k
+    if pad_d:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_d)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, 0), (0, pad_d)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, pad_d)))
+    if pad_s:
+        k = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0)))
+    Sp, Dp = S + pad_s, D + pad_d
+    len2 = lengths.astype(jnp.int32).reshape(B, 1)
+
+    kernel = functools.partial(_kernel, scale=scale, block_k=block_k)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Sp // block_k),
+        in_specs=[
+            pl.BlockSpec((1, H, Dp), lambda b, j: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, H, Dp), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, block_k, H, Dp), lambda b, j: (b, j, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, j: (b, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, H, Dp), lambda b, j: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Dp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((H, Dp), jnp.float32),
+            pltpu.VMEM((H, 128), jnp.float32),
+            pltpu.VMEM((H, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, len2)
+    return out[:, :, :D]

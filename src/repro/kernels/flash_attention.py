@@ -1,0 +1,162 @@
+"""Flash attention (prefill) — Pallas TPU kernel.
+
+Online-softmax tiling over the KV sequence: the grid is
+``(batch*heads, T/block_q, S/block_k)`` with the KV dimension innermost —
+on TPU the last grid dimension executes sequentially per core, so the
+running (max, sum, accumulator) state lives in VMEM scratch and persists
+across KV blocks.
+
+BlockSpec tiling (per grid step, all VMEM):
+    q   : (1, block_q, Dp)        -- Dp = head_dim padded to 128
+    k/v : (1, block_k, Dp)
+    out : (1, block_q, Dp)
+    scratch: acc (block_q, Dp) f32, m/l (block_q, 128) f32 (lane-broadcast)
+
+Causal blocks entirely above the diagonal are skipped with ``pl.when``
+(compute-skip; the init/finalize epilogues still run), which removes
+~half of the S-loop for causal prefill.
+
+Supports GQA-resolved inputs (head mapping happens in the model layer),
+sliding-window masks and a static ``q_offset`` for chunked prefill.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention"]
+
+_NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale: float, causal: bool, window: int, q_offset: int,
+            s_orig: int, block_q: int, block_k: int):
+    i = pl.program_id(1)          # query block
+    j = pl.program_id(2)          # kv block
+    nj = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # --- compute-skip for blocks that are fully masked -------------------
+    in_range = j * block_k < s_orig
+    if causal:
+        # the largest query position in this block vs smallest key position
+        visible = (j * block_k) <= (i * block_q + block_q - 1 + q_offset)
+        should_run = jnp.logical_and(in_range, visible)
+    else:
+        should_run = in_range
+
+    @pl.when(should_run)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)              # [bq, Dp]
+        k = k_ref[0].astype(jnp.float32)              # [bk, Dp]
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+
+        qpos = (i * block_q + q_offset
+                + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0))
+        kpos = (j * block_k
+                + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1))
+        mask = kpos < s_orig
+        if causal:
+            mask = jnp.logical_and(mask, qpos >= kpos)
+        if window:
+            mask = jnp.logical_and(mask, (qpos - kpos) < window)
+        s = jnp.where(mask, s, _NEG_INF)
+
+        m_prev = m_ref[:, :1]                          # [bq, 1]
+        l_prev = l_ref[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)                    # fully-masked rows -> 0
+        alpha = jnp.exp(m_prev - m_new)                # [bq, 1]
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        l = l_ref[:, :1]
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    n = x.shape[axis]
+    target = ((n + mult - 1) // mult) * mult
+    if target == n:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - n)
+    return jnp.pad(x, pads)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "q_offset", "scale", "block_q", "block_k",
+    "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0, q_offset: int = 0,
+                    scale: Optional[float] = None, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q: [B,T,H,D]; k/v: [B,S,H,D] (heads already GQA-aligned)."""
+    B, T, H, D = q.shape
+    S = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    block_q = min(block_q, max(8, T))
+    block_k = min(block_k, max(128, S))
+
+    # [B,T,H,D] -> [B*H, T, Dp]
+    def fold(x):
+        x = jnp.swapaxes(x, 1, 2).reshape(B * H, x.shape[1], D)
+        return _pad_to(x, 2, 128)
+
+    qf, kf, vf = fold(q), fold(k), fold(v)
+    qf = _pad_to(qf, 1, block_q)
+    kf = _pad_to(kf, 1, block_k)
+    vf = _pad_to(vf, 1, block_k)
+    Tp, Sp, Dp = qf.shape[1], kf.shape[1], qf.shape[2]
+
+    grid = (B * H, Tp // block_q, Sp // block_k)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, s_orig=S, block_q=block_q, block_k=block_k)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, Dp), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, Dp), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, Dp), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, Dp), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Tp, Dp), q.dtype),
+        scratch_shapes=[
+            _vmem((block_q, Dp), jnp.float32),
+            _vmem((block_q, 128), jnp.float32),
+            _vmem((block_q, 128), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+
+    out = out[:, :T, :D].reshape(B, H, T, D)
+    return jnp.swapaxes(out, 1, 2)
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+    return pltpu.VMEM(shape, dtype)

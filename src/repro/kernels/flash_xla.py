@@ -1,0 +1,177 @@
+"""Memory-bounded flash attention in pure XLA with a custom VJP.
+
+Differentiating a blockwise-attention scan with plain autodiff stores the
+per-KV-block softmax carries — asymptotically the same O(T*S) footprint the
+blocking was supposed to avoid (§Perf iteration 2, hypothesis refuted by
+measurement). This implementation saves only (q, k, v, out, row-lse) and
+*recomputes* the score blocks in the backward pass — the standard flash
+backward:
+
+    D  = rowsum(dout * out)
+    p  = exp(q k^T * scale - lse)
+    dv += p^T dout
+    dp = dout v^T
+    ds = p * (dp - D) * scale
+    dq += ds k ;  dk += ds^T q
+
+Forward and backward are double loops (lax.scan) over q/kv blocks; live
+intermediates are O(block_q * block_k). Used by ops.attention on non-TPU
+backends for large shapes; the Pallas kernel owns the TPU fast path; the
+full-materialisation oracle in ref.py remains the semantics of record.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_xla"]
+
+_NEG = -1e30
+
+
+def _mask(qi, kj, bq, bk, S, causal, window, q_offset):
+    qpos = qi * bq + jnp.arange(bq)[:, None] + q_offset
+    kpos = kj * bk + jnp.arange(bk)[None, :]
+    m = kpos < S
+    if causal:
+        m &= qpos >= kpos
+    if window:
+        m &= (qpos - kpos) < window
+    return m
+
+
+def _pad(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if not pad:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, pad)
+    return jnp.pad(x, pads)
+
+
+def _fwd(q, k, v, scale, causal, window, q_offset, bq, bk):
+    """Returns (out [B,T,H,D] in q.dtype, lse [B,H,T] f32)."""
+    B, T, H, D = q.shape
+    S = k.shape[1]
+    qp = _pad(q, 1, bq)
+    kp = _pad(k, 1, bk)
+    vp = _pad(v, 1, bk)
+    Tp, Sp = qp.shape[1], kp.shape[1]
+    nq, nk = Tp // bq, Sp // bk
+    qb = jnp.moveaxis(qp.reshape(B, nq, bq, H, D), 1, 0)
+    kb = jnp.moveaxis(kp.reshape(B, nk, bk, H, D), 1, 0)
+    vb = jnp.moveaxis(vp.reshape(B, nk, bk, H, D), 1, 0)
+
+    def q_block(_, qi_q):
+        qi, q_blk = qi_q
+        q32 = q_blk.astype(jnp.float32) * scale
+
+        def kv_step(carry, kj_kv):
+            m_, l_, acc = carry
+            kj, k_blk, v_blk = kj_kv
+            s = jnp.einsum("bthd,bshd->bhts", q32,
+                           k_blk.astype(jnp.float32))
+            msk = _mask(qi, kj, bq, bk, S, causal, window, q_offset)
+            s = jnp.where(msk[None, None], s, _NEG)
+            m_new = jnp.maximum(m_, s.max(-1, keepdims=True))
+            p = jnp.where(msk[None, None], jnp.exp(s - m_new), 0.0)
+            alpha = jnp.exp(m_ - m_new)
+            l_ = alpha * l_ + p.sum(-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum(
+                "bhts,bshd->bhtd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_, acc), None
+
+        init = (jnp.full((B, H, bq, 1), _NEG, jnp.float32),
+                jnp.zeros((B, H, bq, 1), jnp.float32),
+                jnp.zeros((B, H, bq, D), jnp.float32))
+        (m_, l_, acc), _ = jax.lax.scan(kv_step, init,
+                                        (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l_, 1e-30)                  # [B,H,bq,D]
+        lse = (m_ + jnp.log(jnp.maximum(l_, 1e-30)))[..., 0]  # [B,H,bq]
+        return None, (out, lse)
+
+    _, (ob, lseb) = jax.lax.scan(q_block, None, (jnp.arange(nq), qb))
+    out = jnp.moveaxis(ob, 0, 2).reshape(B, H, Tp, D)[:, :, :T]
+    lse = jnp.moveaxis(lseb, 0, 2).reshape(B, H, Tp)[:, :, :T]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype), lse
+
+
+def _bwd(scale, causal, window, q_offset, bq, bk, res, dout):
+    q, k, v, out, lse = res
+    B, T, H, D = q.shape
+    S = k.shape[1]
+    qp, op, dop = (_pad(x, 1, bq) for x in (q, out, dout))
+    lsep = _pad(lse, 2, bq)
+    kp, vp = _pad(k, 1, bk), _pad(v, 1, bk)
+    Tp, Sp = qp.shape[1], kp.shape[1]
+    nq, nk = Tp // bq, Sp // bk
+    qb = jnp.moveaxis(qp.reshape(B, nq, bq, H, D), 1, 0)
+    ob = jnp.moveaxis(op.reshape(B, nq, bq, H, D), 1, 0)
+    dob = jnp.moveaxis(dop.reshape(B, nq, bq, H, D), 1, 0)
+    lseb = jnp.moveaxis(lsep.reshape(B, H, nq, bq), 2, 0)   # [nq,B,H,bq]
+    kb = jnp.moveaxis(kp.reshape(B, nk, bk, H, D), 1, 0)
+    vb = jnp.moveaxis(vp.reshape(B, nk, bk, H, D), 1, 0)
+
+    def q_block(carry, inp):
+        dk_acc, dv_acc = carry                              # [nk,B,bk,H,D] f32
+        qi, q_blk, o_blk, do_blk, lse_blk = inp
+        q32 = q_blk.astype(jnp.float32)
+        do32 = jnp.einsum("bthd->bhtd", do_blk.astype(jnp.float32))
+        Drow = jnp.einsum("bthd,bthd->bht", o_blk.astype(jnp.float32),
+                          do_blk.astype(jnp.float32))       # [B,H,bq]
+
+        def kv_step(dq_acc, kj_kv):
+            kj, k_blk, v_blk = kj_kv
+            s = jnp.einsum("bthd,bshd->bhts", q32 * scale,
+                           k_blk.astype(jnp.float32))
+            msk = _mask(qi, kj, bq, bk, S, causal, window, q_offset)
+            p = jnp.where(msk[None, None],
+                          jnp.exp(s - lse_blk[..., None]), 0.0)
+            dv_b = jnp.einsum("bhts,bhtd->bshd", p, do32)
+            dp = jnp.einsum("bhtd,bshd->bhts", do32,
+                            v_blk.astype(jnp.float32))
+            ds = p * (dp - Drow[..., None]) * scale
+            dq_acc = dq_acc + jnp.einsum("bhts,bshd->bthd", ds,
+                                         k_blk.astype(jnp.float32))
+            dk_b = jnp.einsum("bhts,bthd->bshd", ds, q32)
+            return dq_acc, (dk_b, dv_b)
+
+        dq0 = jnp.zeros((B, bq, H, D), jnp.float32)
+        dq_blk, (dk_b, dv_b) = jax.lax.scan(
+            kv_step, dq0, (jnp.arange(nk), kb, vb))
+        return (dk_acc + dk_b, dv_acc + dv_b), dq_blk
+
+    zero_kv = jnp.zeros((nk, B, bk, H, D), jnp.float32)
+    (dk_f, dv_f), dq_b = jax.lax.scan(
+        q_block, (zero_kv, zero_kv),
+        (jnp.arange(nq), qb, ob, dob, lseb))
+    dq = jnp.moveaxis(dq_b, 0, 1).reshape(B, Tp, H, D)[:, :T].astype(q.dtype)
+    dk = jnp.moveaxis(dk_f, 0, 1).reshape(B, Sp, H, D)[:, :S].astype(k.dtype)
+    dv = jnp.moveaxis(dv_f, 0, 1).reshape(B, Sp, H, D)[:, :S].astype(v.dtype)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention_xla(q, k, v, scale: float, causal: bool, window: int,
+                        q_offset: int, block_q: int = 512,
+                        block_k: int = 512):
+    out, _ = _fwd(q, k, v, scale, causal, window, q_offset, block_q, block_k)
+    return out
+
+
+def _vjp_fwd(q, k, v, scale, causal, window, q_offset, block_q, block_k):
+    out, lse = _fwd(q, k, v, scale, causal, window, q_offset, block_q,
+                    block_k)
+    return out, (q, k, v, out, lse)
+
+
+def _vjp_bwd(scale, causal, window, q_offset, block_q, block_k, res, dout):
+    return _bwd(scale, causal, window, q_offset, block_q, block_k, res, dout)
+
+
+flash_attention_xla.defvjp(_vjp_fwd, _vjp_bwd)

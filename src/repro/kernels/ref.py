@@ -1,0 +1,256 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics of record: kernels are validated against these with
+``interpret=True`` sweeps in tests/test_kernels.py, and non-TPU backends run
+them in production code paths (see ops.py).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["flash_attention_ref", "blockwise_attention_ref",
+           "decode_attention_ref", "ssd_ref", "ssd_dual", "rglru_ref"]
+
+
+#: above this many score elements per head, this oracle switches to the
+#: blockwise (scan) implementation so lowering stays memory-bounded (the
+#: production non-TPU path with a flash custom VJP lives in flash_xla.py
+#: and is selected by ops.attention; this module stays autodiff-plain).
+_BLOCKWISE_THRESHOLD = 4096 * 4096
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool = True, window: int = 0,
+                        q_offset: int = 0,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """Attention oracle. q: [B,T,H,D]; k/v: [B,S,H,D].
+
+    Small shapes materialise the full score matrix (the semantics of
+    record); large shapes run the mathematically identical blockwise
+    online-softmax scan, which is what the dry-run lowers through — peak
+    live memory per head is O(T * block) instead of O(T * S).
+    """
+    B, T, H, D = q.shape
+    S = k.shape[1]
+    if T * S > _BLOCKWISE_THRESHOLD:
+        return blockwise_attention_ref(q, k, v, causal=causal, window=window,
+                                       q_offset=q_offset, scale=scale)
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    logits = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    qp = jnp.arange(T)[:, None] + q_offset
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((T, S), bool)
+    if causal:
+        mask &= qp >= kp
+    if window:
+        mask &= (qp - kp) < window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def blockwise_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                            *, causal: bool = True, window: int = 0,
+                            q_offset: int = 0, scale: Optional[float] = None,
+                            block_q: int = 1024,
+                            block_k: int = 1024) -> jnp.ndarray:
+    """Flash attention in pure XLA: lax.scan over KV blocks with an
+    online-softmax carry, vmapped over query blocks. Exact same math as
+    :func:`flash_attention_ref`, O(block_q * block_k) live scores."""
+    B, T, H, D = q.shape
+    S = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    pad_t = (-T) % block_q
+    pad_s = (-S) % block_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_t), (0, 0), (0, 0))) if pad_t else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_s), (0, 0), (0, 0))) if pad_s else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_s), (0, 0), (0, 0))) if pad_s else v
+    Tp, Sp = T + pad_t, S + pad_s
+    nq, nk = Tp // block_q, Sp // block_k
+    # [B, nq, bq, H, D] / [nk, B, bk, H, D]
+    qb = qp.reshape(B, nq, block_q, H, D)
+    kb = kp.reshape(B, nk, block_k, H, D).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nk, block_k, H, D).transpose(1, 0, 2, 3, 4)
+
+    def one_q_block(qi, q_blk):                       # q_blk: [B, bq, H, D]
+        q32 = q_blk.astype(jnp.float32) * scale
+
+        def kv_step(carry, inp):
+            m, l, acc = carry                          # [B,H,bq,1], .., [B,H,bq,D]
+            kj, k_blk, v_blk = inp
+            s = jnp.einsum("bthd,bshd->bhts", q32, k_blk.astype(jnp.float32))
+            qpos = qi * block_q + jnp.arange(block_q)[:, None] + q_offset
+            kpos = kj * block_k + jnp.arange(block_k)[None, :]
+            mask = kpos < S
+            if causal:
+                mask &= qpos >= kpos
+            if window:
+                mask &= (qpos - kpos) < window
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(-1, keepdims=True))
+            p = jnp.where(mask[None, None], jnp.exp(s - m_new), 0.0)
+            alpha = jnp.exp(m - m_new)
+            l = alpha * l + p.sum(-1, keepdims=True)
+            acc = acc * alpha + jnp.einsum("bhts,bshd->bhtd", p,
+                                           v_blk.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        init = (jnp.full((B, H, block_q, 1), -1e30, jnp.float32),
+                jnp.zeros((B, H, block_q, 1), jnp.float32),
+                jnp.zeros((B, H, block_q, D), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nk), kb, vb))
+        out = acc / jnp.maximum(l, 1e-30)              # [B, H, bq, D]
+        return out.transpose(0, 2, 1, 3)               # [B, bq, H, D]
+
+    out = jax.lax.map(lambda args: one_q_block(*args),
+                      (jnp.arange(nq), qb.transpose(1, 0, 2, 3, 4)))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, Tp, H, D)[:, :T]
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         lengths: jnp.ndarray,
+                         scale: Optional[float] = None) -> jnp.ndarray:
+    """Single-token decode attention over a padded KV cache.
+
+    q: [B,H,D]; k/v: [B,S,H,D]; lengths: [B] — number of valid cache slots.
+    """
+    B, H, D = q.shape
+    S = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    logits = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    mask = jnp.arange(S)[None] < lengths[:, None]            # [B, S]
+    logits = jnp.where(mask[:, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhs,bshd->bhd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray, dt: jnp.ndarray,
+            A: jnp.ndarray, D: jnp.ndarray,
+            init_state: Optional[jnp.ndarray] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mamba2 SSD recurrence (state-space duality), sequential over time.
+
+        s_t = exp(dt_t * A) * s_{t-1} + dt_t * x_t B_t^T
+        y_t = C_t s_t + D * x_t
+
+    x: [Bsz,T,H,hd]; B/C: [Bsz,T,N]; dt: [Bsz,T,H]; A/D: [H].
+    Returns (y [Bsz,T,H,hd], final_state [Bsz,H,hd,N]).
+    """
+    Bsz, T, H, hd = x.shape
+    N = B.shape[-1]
+    dA = jnp.exp(dt.astype(jnp.float32) * A[None, None, :])
+    s0 = (jnp.zeros((Bsz, H, hd, N), jnp.float32)
+          if init_state is None else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        xt, Bt, Ct, dAt, dtt = inp
+        s = s * dAt[..., None, None] \
+            + (dtt[..., None] * xt.astype(jnp.float32))[..., None] * Bt[:, None, None, :].astype(jnp.float32)
+        yt = jnp.einsum("bhdn,bn->bhd", s, Ct.astype(jnp.float32))
+        return s, yt
+
+    xs = (x.transpose(1, 0, 2, 3), B.transpose(1, 0, 2), C.transpose(1, 0, 2),
+          dA.transpose(1, 0, 2), dt.transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, s0, xs)
+    y = ys.transpose(1, 0, 2, 3) + x.astype(jnp.float32) * D[None, None, :, None]
+    return y, final
+
+
+def ssd_dual(x: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray, dt: jnp.ndarray,
+             A: jnp.ndarray, D: jnp.ndarray,
+             init_state: Optional[jnp.ndarray] = None, *,
+             chunk: int = 128) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mamba2 SSD via the chunked *dual* (matmul) form — the memory-safe
+    training path.
+
+    Differentiating the sequential recurrence saves the [B,H,hd,N] state at
+    every timestep (33 MB x 4096 steps/layer at the train_4k shape — §Perf
+    iteration 3, mamba2). The dual form computes intra-chunk outputs as
+    masked matmuls and propagates chunk-boundary states with a log-depth
+    associative scan, so autodiff keeps O(T/Q) states instead of O(T).
+    Same math as :func:`ssd_ref` (the duality), validated in tests.
+    """
+    Bz, T, H, hd = x.shape
+    N = B.shape[-1]
+    Q = min(chunk, T)
+    pad = (-T) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    Tp = T + pad
+    nc = Tp // Q
+    xc = x.reshape(Bz, nc, Q, H, hd).astype(jnp.float32)
+    Bc = B.reshape(Bz, nc, Q, N).astype(jnp.float32)
+    Cc = C.reshape(Bz, nc, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(Bz, nc, Q, H).astype(jnp.float32)
+    cs = jnp.cumsum(dtc * A[None, None, None, :], axis=2)   # [Bz,nc,Q,H]
+    cq = cs[:, :, -1]                                        # [Bz,nc,H]
+
+    # per-chunk increment + decay of the boundary-state recurrence
+    w = jnp.exp(cq[:, :, None] - cs) * dtc                   # [Bz,nc,Q,H]
+    inc = jnp.einsum("bcqhd,bcqn->bchdn", xc * w[..., None], Bc)
+    decay = jnp.exp(cq)                                      # [Bz,nc,H]
+
+    def combine(l, r):
+        dl, il = l
+        dr, ir = r
+        return dl * dr, ir + il * dr[..., None, None]
+
+    d_all, i_all = jax.lax.associative_scan(
+        combine, (decay, inc), axis=1)                       # inclusive
+    s0 = (jnp.zeros((Bz, H, hd, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    # state entering chunk c = scan result of chunks < c, plus s0 decayed
+    d_prev = jnp.concatenate(
+        [jnp.ones_like(d_all[:, :1]), d_all[:, :-1]], axis=1)
+    i_prev = jnp.concatenate(
+        [jnp.zeros_like(i_all[:, :1]), i_all[:, :-1]], axis=1)
+    s_in = i_prev + d_prev[..., None, None] * s0[:, None]    # [Bz,nc,H,hd,N]
+
+    # outputs: inter-chunk + masked intra-chunk matmul
+    y_inter = jnp.exp(cs)[..., None] * jnp.einsum(
+        "bcqn,bchdn->bcqhd", Cc, s_in)
+    G = jnp.einsum("bcqn,bcsn->bcqs", Cc, Bc)                # [Bz,nc,Q,Q]
+    t_i = jnp.arange(Q)[:, None]
+    s_i = jnp.arange(Q)[None, :]
+    expo = cs[:, :, :, None, :] - cs[:, :, None, :, :]       # [Bz,nc,Q,Q,H]
+    expo = jnp.where((t_i >= s_i)[None, None, :, :, None], expo, -1e30)
+    L = jnp.exp(expo) * dtc[:, :, None, :, :]                # [Bz,nc,t,s,H]
+    y_intra = jnp.einsum("bcqs,bcqsh,bcshd->bcqhd", G, L, xc)
+    y = (y_inter + y_intra).reshape(Bz, Tp, H, hd)[:, :T]
+    y = y + x[:, :T].astype(jnp.float32) * D[None, None, :, None]
+    final = i_all[:, -1] + d_all[:, -1][..., None, None] * s0
+    return y, final
+
+
+def rglru_ref(a: jnp.ndarray, x: jnp.ndarray,
+              init_state: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Gated linear recurrence  h_t = a_t * h_{t-1} + x_t  (RG-LRU core).
+
+    a/x: [B, T, W] (fp32). Returns (h [B,T,W], final_state [B,W]).
+    """
+    B, T, W = a.shape
+    h0 = jnp.zeros((B, W), jnp.float32) if init_state is None \
+        else init_state.astype(jnp.float32)
+
+    def step(h, inp):
+        at, xt = inp
+        h = at * h + xt
+        return h, h
+
+    final, hs = jax.lax.scan(
+        step, h0, (a.transpose(1, 0, 2).astype(jnp.float32),
+                   x.transpose(1, 0, 2).astype(jnp.float32)))
+    return hs.transpose(1, 0, 2), final

@@ -1,0 +1,141 @@
+"""Mamba2 SSD (state-space duality) chunked scan — Pallas TPU kernel.
+
+The sequential recurrence
+
+    s_t = exp(dt_t * A) * s_{t-1} + dt_t * x_t B_t^T
+    y_t = C_t s_t (+ D * x_t, added outside the kernel)
+
+is recast per chunk of Q timesteps into MXU-friendly matmuls (the "duality"):
+with per-chunk cumulative log-decay cs_t = sum_{r<=t} dt_r*A,
+
+    y_intra = ((C B^T) o L) @ x      L[t,s] = exp(cs_t - cs_s) * dt_s, s <= t
+    y_inter = exp(cs)[:,None] * (C @ state^T)
+    state'  = exp(cs_Q) * state + (x * (exp(cs_Q - cs)*dt)[:,None])^T @ B
+
+The grid is ``(batch, heads, T/chunk)`` with chunks innermost (sequential on
+TPU), so the [hd, N] running state persists in VMEM scratch across chunks.
+cs is precomputed outside the kernel (per-chunk cumsum of dt*A) so the
+kernel body is pure matmul + elementwise; all exponent differences are
+<= 0 for valid (t, s) pairs, so nothing overflows.
+
+BlockSpec tiling (per grid step, all VMEM):
+    x    : (1, Q, 1, hd)    B/C : (1, Q, N)
+    dt,cs: (1, 1, Q)        (time-last layout for lane alignment)
+    state scratch: (hd, N) f32
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["ssd_chunked"]
+
+
+def _kernel(x_ref, b_ref, c_ref, dt_ref, cs_ref, s0_ref, y_ref, sf_ref,
+            state, *, chunk: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # [Q, hd]
+    Bm = b_ref[0].astype(jnp.float32)                  # [Q, N]
+    Cm = c_ref[0].astype(jnp.float32)                  # [Q, N]
+    dt = dt_ref[0]                                     # [1, Q] f32
+    cs = cs_ref[0]                                     # [1, Q] f32
+    cs_t = jnp.swapaxes(cs, 0, 1)                      # [Q, 1]
+
+    # inter-chunk: contribution of the carried state
+    y_inter = jnp.exp(cs_t) * jax.lax.dot_general(
+        Cm, state[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)            # [Q, hd]
+
+    # intra-chunk: masked (decay o gram) matmul
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [Q, Q]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    expo = jnp.where(t_idx >= s_idx, cs_t - cs, -1e30)  # [Q, Q]
+    L = jnp.exp(expo) * dt                              # row-bcast dt_s
+    y = y_inter + jax.lax.dot_general(
+        G * L, x, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    # state update
+    cq = cs[0, chunk - 1]
+    w = jnp.exp(cq - cs) * dt                           # [1, Q]
+    state[...] = jnp.exp(cq) * state[...] + jax.lax.dot_general(
+        x * jnp.swapaxes(w, 0, 1), Bm, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)             # [hd, N]
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        sf_ref[0, 0] = state[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked(x: jnp.ndarray, B: jnp.ndarray, C: jnp.ndarray,
+                dt: jnp.ndarray, A: jnp.ndarray, D: jnp.ndarray,
+                init_state: Optional[jnp.ndarray] = None, *,
+                chunk: int = 128,
+                interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [Bz,T,H,hd]; B/C: [Bz,T,N]; dt: [Bz,T,H]; A/D: [H].
+
+    Returns (y [Bz,T,H,hd] f32, final_state [Bz,H,hd,N] f32).
+    """
+    Bz, T, H, hd = x.shape
+    N = B.shape[-1]
+    chunk = min(chunk, max(8, T))
+    pad_t = (-T) % chunk
+    if pad_t:
+        # dt=0 padding preserves the state (exp(0)=1 decay, 0 input weight)
+        x = jnp.pad(x, ((0, 0), (0, pad_t), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad_t), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad_t), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad_t), (0, 0)))
+    Tp = T + pad_t
+    nc = Tp // chunk
+
+    dtf = dt.astype(jnp.float32)
+    dal = dtf * A[None, None, :]                        # log-decay [Bz,Tp,H]
+    cs = jnp.cumsum(dal.reshape(Bz, nc, chunk, H), axis=2).reshape(Bz, Tp, H)
+    # time-last layout for the kernel
+    dt_tl = jnp.swapaxes(dtf, 1, 2)                     # [Bz, H, Tp]
+    cs_tl = jnp.swapaxes(cs, 1, 2)
+    s0 = (jnp.zeros((Bz, H, hd, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    kernel = functools.partial(_kernel, chunk=chunk)
+    y, sf = pl.pallas_call(
+        kernel,
+        grid=(Bz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, 1, chunk), lambda b, h, c: (b, h, c)),
+            pl.BlockSpec((1, 1, hd, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, hd, N), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bz, Tp, H, hd), jnp.float32),
+            jax.ShapeDtypeStruct((Bz, H, hd, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, N), jnp.float32)],
+        interpret=interpret,
+    )(x, B, C, dt_tl, cs_tl, s0)
+
+    y = y[:, :T] + x[:, :T].astype(jnp.float32) * D[None, None, :, None]
+    return y, sf

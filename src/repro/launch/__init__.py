@@ -1,0 +1,9 @@
+"""repro.launch — meshes, dry-run, and cluster entrypoints.
+
+NOTE: ``repro.launch.dryrun`` must be the FIRST jax-touching import of its
+process (it pins 512 placeholder devices). Import it only as an entrypoint
+(``python -m repro.launch.dryrun``), never from library code.
+"""
+from .mesh import make_production_mesh, make_mesh_for
+
+__all__ = ["make_production_mesh", "make_mesh_for"]

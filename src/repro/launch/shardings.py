@@ -1,0 +1,197 @@
+"""Parameter / cache / batch PartitionSpec derivation for the dry-run.
+
+Specs are derived *structurally* from an abstract ``jax.eval_shape`` of the
+model init: every leaf is classified by the names on its tree path and its
+rank, so new blocks inherit sensible shardings without a registry edit.
+
+Layout policy (see DESIGN.md §5):
+  * TP: projection output dims (heads, d_ff, vocab) over "model"; the
+    mirrored input dims of the out-projections over "model" as well.
+  * EP: expert bank dim over ``ep_axes`` (("model",) or ("data","model")
+    for DeepSeek-V3-scale banks).
+  * ZeRO-3 (training): the non-TP dim of every matmul weight over
+    ``zero3_axes``; optimizer moments inherit the same specs.
+  * SSM / RG-LRU mixers: replicated over "model" (their recurrences are
+    latency-bound and small), ZeRO-3 over data for training.
+  * Decode KV caches: sequence-sharded over "model" (flash-decoding);
+    batch over the DP axes.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.sharding import ShardCtx
+
+__all__ = ["param_specs", "cache_specs", "batch_specs", "to_shardings"]
+
+
+def _name(entry) -> str:
+    return str(getattr(entry, "key", getattr(entry, "idx", entry)))
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    return tuple(_name(e) for e in path)
+
+
+# weight-dict parents whose 'w' has its OUTPUT dim TP-sharded
+_OUT_TP = {"wq", "wk", "wv", "wq_b", "wk_b", "wv_b", "wi", "wg", "unembed",
+           "w_x", "w_gate_branch"}      # rglru width is TP-sharded too
+# parents whose 'w' has its INPUT dim TP-sharded (out-projections)
+_IN_TP = {"wo", "w_out_rg"}
+# parents kept replicated on "model" (latent/small projections)
+_REPL = {"wq_a", "wkv_a", "mtp_proj"}
+# moe expert bank leaves (3D arrays, dim0 = expert)
+_EXPERT = {"w_in", "w_gate", "w_out"}
+
+
+def _zero3(ctx: ShardCtx):
+    if not ctx.zero3:
+        return None
+    return ctx.zero3_axes if len(ctx.zero3_axes) > 1 else ctx.zero3_axes[0]
+
+
+def _axes_size(ctx: ShardCtx, ax) -> int:
+    if ax is None or ctx.mesh is None:
+        return 1
+    if isinstance(ax, str):
+        return ctx.mesh.shape[ax]
+    n = 1
+    for a in ax:
+        n *= ctx.mesh.shape[a]
+    return n
+
+
+def _guarded(ctx: ShardCtx, leaf, *axes) -> P:
+    """Drop any proposed axis whose mesh size does not divide the dim —
+    e.g. mamba2's vocab (50280) is not 16-divisible, so its embedding
+    falls back to replicated-over-model."""
+    parts = []
+    # leading dims beyond the spec (scan-stacked) default to None
+    axes = list(axes) + [None] * (leaf.ndim - len(axes))
+    for size, ax in zip(leaf.shape, axes):
+        n = _axes_size(ctx, ax)
+        parts.append(ax if (n > 1 and size % n == 0) else None)
+    return P(*parts)
+
+
+def param_pspec(path, leaf, ctx: ShardCtx) -> P:
+    names = _path_names(path)
+    leafname = names[-1]
+    parent = names[-2] if len(names) >= 2 else ""
+    z3 = _zero3(ctx)
+    mdl = ctx.model_axis
+    ep = ctx.ep_axes if len(ctx.ep_axes) > 1 else ctx.ep_axes[0]
+    # scan-stacked layer params carry a leading (count,) dim; spec dims are
+    # matched from the RIGHT
+    extra = 0
+    core_ndim = leaf.ndim
+
+    def with_lead(*axes):
+        lead = leaf.ndim - len(axes)
+        return _guarded(ctx, leaf, *([None] * lead), *axes)
+
+    # ---- embeddings -----------------------------------------------------
+    if leafname == "embed":
+        return _guarded(ctx, leaf, mdl, z3)          # vocab sharded
+    # ---- MoE expert banks ([count?, E, d, F]) ---------------------------
+    if leafname in _EXPERT and leaf.ndim >= 3:
+        # ZeRO-3 the d_model dim over every DP axis NOT already carrying
+        # experts (§Perf iteration: optimizer moments of a 645B expert bank
+        # must not replicate over the pod). The EP shard_map gathers the
+        # spare axes back at use — standard ZeRO-3 cost.
+        extra = None
+        if ctx.zero3:
+            cand = [a for a in ctx.zero3_axes if a not in ctx.ep_axes]
+            if cand:
+                extra = tuple(cand) if len(cand) > 1 else cand[0]
+        return with_lead(ep, extra, None)
+    if leafname == "router":
+        return with_lead(None, None)
+    # rglru block-diagonal gates + per-channel decay: width over "model"
+    if leafname in ("gate_in", "gate_rec"):
+        return with_lead(mdl, None, None)
+    if leafname == "a_param":
+        return with_lead(mdl)
+    # ---- dense dicts {'w': [in, out], 'b': [out]} -----------------------
+    if leafname == "w":
+        owner = parent
+        if owner in _OUT_TP or (len(names) >= 3 and names[-3] == "unembed"):
+            return with_lead(z3, mdl)
+        if owner in _IN_TP:
+            return with_lead(mdl, z3)
+        if owner in _REPL:
+            return with_lead(z3, None)
+        if owner == "w_out":                        # mixer out-proj (ssd/rglru)
+            return with_lead(None, z3)
+        if owner == "w_in":                         # ssd fused in-proj (dense)
+            return with_lead(z3, None)
+        return with_lead(z3, None)
+    if leafname == "b":
+        return with_lead(mdl if parent in _OUT_TP else None)
+    # ---- everything else (norm gains, conv kernels, A_log, gates...) ----
+    return P(*([None] * leaf.ndim))
+
+
+def param_specs(model, key=None) -> Any:
+    """PartitionSpec pytree matching ``model.init``."""
+    import jax.random as jr
+    key = key if key is not None else jr.PRNGKey(0)
+    abstract = jax.eval_shape(model.init, key)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_pspec(path, leaf, model.ctx), abstract)
+
+
+# =====================================================================
+# decode caches
+# =====================================================================
+def cache_pspec(path, leaf, ctx: ShardCtx) -> P:
+    """Decode-cache leaf spec: [count, B, S, ...] token leaves get
+    (None, batch, "model", ...); state leaves (None, batch, ...)."""
+    names = _path_names(path)
+    leafname = names[-1]
+    batch = (ctx.batch_axes if len(ctx.batch_axes) > 1 else ctx.batch_axes[0])
+    if leaf.shape[1] == 1 or _all_one(ctx, leaf.shape[1]):
+        batch = None                                  # B not divisible: replicate
+    token = leafname in ("k", "v", "c", "kr", "xk", "xv")
+    if token:
+        seq = ctx.model_axis if ctx.kv_seq_shard else None
+        rest = [None] * (leaf.ndim - 3)
+        return P(None, batch, seq, *rest)
+    return P(None, batch, *([None] * (leaf.ndim - 2)))
+
+
+def _all_one(ctx: ShardCtx, b: int) -> bool:
+    if ctx.mesh is None:
+        return True
+    n = 1
+    for a in ctx.batch_axes:
+        n *= ctx.mesh.shape[a]
+    return b % n != 0
+
+
+def cache_specs(abstract_cache, ctx: ShardCtx) -> Any:
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_pspec(path, leaf, ctx), abstract_cache)
+
+
+# =====================================================================
+# batches
+# =====================================================================
+def batch_specs(abstract_batch, ctx: ShardCtx) -> Any:
+    """tokens/labels [B, T] -> P(batch, None); embeds [B, T, D] likewise."""
+    batch = (ctx.batch_axes if len(ctx.batch_axes) > 1 else ctx.batch_axes[0])
+
+    def spec(path, leaf):
+        b = batch if not _all_one(ctx, leaf.shape[0]) else None
+        return P(b, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(spec, abstract_batch)
+
+
+def to_shardings(spec_tree, mesh) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

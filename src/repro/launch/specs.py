@@ -1,0 +1,229 @@
+"""Per-(architecture x input-shape) dry-run cell construction.
+
+For every cell this module builds:
+  * the step function actually deployed for that shape kind
+      - train_*   -> ``train_step``  (loss + AdamW update, remat)
+      - prefill_* -> ``prefill_step`` (logits + KV cache)
+      - decode_* / long_* -> ``serve_step`` (one token against a full cache)
+  * ShapeDtypeStruct stand-ins for every input (no allocation),
+  * in/out NamedShardings derived from launch.shardings,
+  * roofline metadata (MODEL_FLOPS, bytes) consumed by benchmarks.roofline.
+
+Cell-level policy decisions (recorded in DESIGN.md / EXPERIMENTS.md):
+  * decode KV caches are sequence-sharded over "model" (flash-decoding) and
+    store real (unpadded) KV heads;
+  * qwen1.5-32b decode_32k stores int8 KV — the only cell whose bf16 cache
+    exceeds pod HBM;
+  * DeepSeek-V3 runs 2D expert parallelism over ("data","model") — a 16-way
+    shard of its 645B expert bank cannot fit one chip;
+  * training runs ZeRO-3 over the DP axes with remat; DeepSeek-V3 training
+    additionally uses bf16 optimizer moments;
+  * ``long_500k`` lowers only for the bounded-state archs (mamba2,
+    recurrentgemma); the 8 full-attention archs are documented skips.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs import ARCHS, SHAPES
+from ..configs.base import ArchConfig, ShapeCell
+from ..models.lm import Model, build_model
+from ..models.sharding import ShardCtx
+from ..training.optim import AdamWConfig
+from ..training.trainer import TrainState, init_train_state, make_train_step
+from .shardings import batch_specs, cache_specs, param_specs, to_shardings
+
+__all__ = ["Cell", "plan_cells", "build_cell", "input_specs", "make_ctx",
+           "SKIP_REASONS", "KV_DTYPE_OVERRIDES"]
+
+# archs with an O(1)-state long-context path; everyone else skips long_500k
+_SUBQUADRATIC = {"mamba2-1.3b", "recurrentgemma-9b"}
+
+SKIP_REASONS: Dict[Tuple[str, str], str] = {
+    (a, "long_500k"): ("pure full attention: a 524288-token dense KV cache "
+                       "has no sub-quadratic path (documented skip)")
+    for a in ARCHS if a not in _SUBQUADRATIC
+}
+
+#: cells whose bf16 KV cache exceeds pod HBM -> int8 storage
+KV_DTYPE_OVERRIDES: Dict[Tuple[str, str], Any] = {
+    ("qwen1.5-32b", "decode_32k"): jnp.int8,
+}
+
+#: MoE archs whose expert bank needs pod-wide (2D) expert parallelism
+_EP_2D = {"deepseek-v3-671b"}
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: ShapeCell
+    kind: str                                  # train | prefill | decode
+    fn: Callable = None
+    args: Tuple = ()                           # ShapeDtypeStructs
+    in_shardings: Tuple = ()
+    out_shardings: Any = None
+    model_flops: float = 0.0                   # 6ND / 2ND per step
+    skip: Optional[str] = None
+    kv_dtype: Any = jnp.bfloat16
+    notes: str = ""
+
+
+def plan_cells(archs: Optional[List[str]] = None,
+               shapes: Optional[List[str]] = None) -> List[Cell]:
+    out = []
+    for a in (archs or list(ARCHS)):
+        for s in SHAPES:
+            if shapes and s.name not in shapes:
+                continue
+            out.append(Cell(arch=a, shape=s, kind=s.kind,
+                            skip=SKIP_REASONS.get((a, s.name)),
+                            kv_dtype=KV_DTYPE_OVERRIDES.get(
+                                (a, s.name), jnp.bfloat16)))
+    return out
+
+
+# =====================================================================
+# context / policy selection
+# =====================================================================
+def make_ctx(cfg: ArchConfig, mesh: Mesh, shape: ShapeCell) -> ShardCtx:
+    multi_pod = "pod" in mesh.axis_names
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    ep_axes = (("data", "model") if cfg.name in _EP_2D else ("model",))
+    return ShardCtx(
+        mesh=mesh,
+        batch_axes=batch_axes,
+        zero3=(shape.kind == "train"),
+        zero3_axes=batch_axes,
+        ep_axes=ep_axes,
+        kv_seq_shard=(shape.kind == "decode"),
+    )
+
+
+def _src_len(cfg: ArchConfig, seq_len: int) -> int:
+    """Encoder frame count for the stubbed audio frontend."""
+    return max(16, min(4096, seq_len // 4))
+
+
+# =====================================================================
+# input specs (ShapeDtypeStruct stand-ins, per the brief)
+# =====================================================================
+def input_specs(arch: str, shape_name: str) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Abstract model inputs for one cell (weak-type-correct, shardable)."""
+    cfg = ARCHS[arch]
+    shape = next(s for s in SHAPES if s.name == shape_name)
+    B, T = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    batch: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "decode":
+        batch["tok"] = sds((B, 1), i32)
+        batch["pos"] = sds((), i32)
+        return batch
+    if cfg.family == "vlm":
+        # modality frontend stub: precomputed patch embeddings
+        batch["inputs_embeds"] = sds((B, T, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = sds((B, T), i32)
+    if cfg.enc_layers:
+        batch["src_embeds"] = sds((B, _src_len(cfg, T), cfg.d_model),
+                                  jnp.bfloat16)
+    if shape.kind == "train":
+        batch["labels"] = sds((B, T), i32)
+        if cfg.mtp:
+            batch["labels2"] = sds((B, T), i32)
+    return batch
+
+
+# =====================================================================
+# cell building
+# =====================================================================
+def build_cell(cell: Cell, mesh: Mesh, unroll: bool = False) -> Cell:
+    """Populate ``cell`` with fn/args/shardings for ``mesh``."""
+    cfg = ARCHS[cell.arch]
+    shape = cell.shape
+    ctx = make_ctx(cfg, mesh, shape)
+    model = build_model(cfg, ctx, remat=(shape.kind == "train"))
+    model.unroll = unroll
+    key = jax.random.PRNGKey(0)
+
+    pspecs = param_specs(model, key)
+    psh = to_shardings(pspecs, mesh)
+    abstract_params = jax.eval_shape(model.init, key)
+
+    batch_abs = _model_batch(cfg, shape)
+    bsh = to_shardings(batch_specs(batch_abs, ctx), mesh)
+
+    if shape.kind == "train":
+        opt_cfg = AdamWConfig(
+            state_dtype=(jnp.bfloat16 if cfg.name == "deepseek-v3-671b"
+                         else jnp.float32))
+        step = make_train_step(model, opt_cfg)
+        state_abs = jax.eval_shape(
+            lambda k: init_train_state(model, k, opt_cfg), key)
+        state_spec = TrainState(
+            params=pspecs,
+            opt=type(state_abs.opt)(step=P(), m=pspecs, v=pspecs),
+            step=P())
+        ssh = to_shardings(state_spec, mesh)
+        metrics_sh = {"loss": NamedSharding(mesh, P()),
+                      "grad_norm": NamedSharding(mesh, P())}
+        cell.fn = step
+        cell.args = (state_abs, batch_abs)
+        cell.in_shardings = (ssh, bsh)
+        cell.out_shardings = (ssh, metrics_sh)
+        cell.model_flops = 6.0 * cfg.params_active() * shape.global_batch \
+            * shape.seq_len
+    elif shape.kind == "prefill":
+        def prefill_step(p, b):
+            return model.prefill(p, b)
+        cell.fn = prefill_step
+        cell.args = (abstract_params, batch_abs)
+        cell.in_shardings = (psh, bsh)
+        cell.out_shardings = None                       # compiler chooses
+        cell.model_flops = 2.0 * cfg.params_active() * shape.global_batch \
+            * shape.seq_len
+    else:                                               # decode / long
+        B, S = shape.global_batch, shape.seq_len
+        src = _src_len(cfg, S) if cfg.enc_layers else 0
+        cache_abs = jax.eval_shape(
+            lambda: model.init_cache(B, S, cell.kv_dtype, src_len=src))
+        csh = to_shardings(cache_specs(cache_abs, ctx), mesh)
+        tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+        pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        tok_sh = NamedSharding(mesh, batch_specs(tok_abs, ctx))
+        pos_sh = NamedSharding(mesh, P())
+
+        def serve_step(p, caches, tok, pos):
+            return model.decode_step(p, caches, tok, pos)
+        logits_sh = NamedSharding(mesh, P(None, None, None))
+        cell.fn = serve_step
+        cell.args = (abstract_params, cache_abs, tok_abs, pos_abs)
+        cell.in_shardings = (psh, csh, tok_sh, pos_sh)
+        cell.out_shardings = (logits_sh, csh)           # stable decode loop
+        cell.model_flops = 2.0 * cfg.params_active() * B
+    return cell
+
+
+def _model_batch(cfg: ArchConfig, shape: ShapeCell):
+    """ShapeDtypeStruct batch in the model's own key naming."""
+    B, T = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    batch: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "vlm":
+        batch["inputs_embeds"] = sds((B, T, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = sds((B, T), jnp.int32)
+    if cfg.enc_layers:
+        batch["src_embeds"] = sds((B, _src_len(cfg, T), cfg.d_model),
+                                  jnp.bfloat16)
+    if shape.kind == "train":
+        batch["labels"] = sds((B, T), jnp.int32)
+        if cfg.mtp:
+            batch["labels2"] = sds((B, T), jnp.int32)
+    return batch

@@ -1,0 +1,6 @@
+"""repro.models — JAX model zoo driven by ArchConfig."""
+from .sharding import ShardCtx, pad_to_multiple
+from .lm import Model, build_model, plan_segments, Segment
+
+__all__ = ["ShardCtx", "pad_to_multiple", "Model", "build_model",
+           "plan_segments", "Segment"]

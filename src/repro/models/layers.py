@@ -1,0 +1,171 @@
+"""Shared building blocks for the JAX model zoo.
+
+Pure-functional modules: every block is (params pytree, apply fn). Parameter
+initialisation takes an explicit PRNG key and abstract=True support so the
+dry-run can build ShapeDtypeStruct parameter trees without allocating.
+
+Sharding convention (logical axes annotated with jax.lax.with_sharding_constraint
+at the model level, not here): weight matrices are stored as
+  [d_model, heads*hd] / [d_model, d_ff] etc. with the *second* dim sharded on
+  the "model" mesh axis and the first dim optionally sharded on "data"
+  (ZeRO-3); activations are [batch, seq, d_model] with batch on
+  ("pod","data").
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Param", "init_dense", "dense", "rmsnorm_params", "rmsnorm",
+    "rope", "apply_rope", "mrope_positions", "swiglu_params", "swiglu",
+    "gqa_attention", "causal_mask", "local_mask", "softmax_xent",
+]
+
+Param = Any
+DEFAULT_DTYPE = jnp.bfloat16
+
+
+def _maybe(key, shape, scale, dtype, abstract):
+    if abstract:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, dtype=DEFAULT_DTYPE,
+               bias: bool = False, abstract: bool = False) -> Dict[str, Param]:
+    scale = 1.0 / math.sqrt(d_in)
+    p = {"w": _maybe(key, (d_in, d_out), scale, dtype, abstract)}
+    if bias:
+        if abstract:
+            p["b"] = jax.ShapeDtypeStruct((d_out,), dtype)
+        else:
+            p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: Dict[str, Param], x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_params(d: int, dtype=jnp.float32, abstract: bool = False):
+    if abstract:
+        return {"g": jax.ShapeDtypeStruct((d,), dtype)}
+    return {"g": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, axis=-1, keepdims=True) + eps)
+    return (y * p["g"]).astype(dt)
+
+
+# ---------------------------------------------------------------------- RoPE
+def rope(positions: jnp.ndarray, dim: int, theta: float = 1e4) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(sin, cos) tables for ``positions`` [..., T] over ``dim`` channels."""
+    half = dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs   # [..., T, half]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, T, H, D]; sin/cos: [B, T, D/2] (or broadcastable)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., None, :]
+    c = cos[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def mrope_positions(batch: int, seq: int, sections=(16, 24, 24)) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE stand-in position ids: [3, B, T] (temporal, h, w).
+
+    For text-only / pre-embedded input the three components coincide, which
+    is exactly Qwen2-VL's behaviour for text tokens.
+    """
+    pos = jnp.broadcast_to(jnp.arange(seq)[None], (batch, seq))
+    return jnp.stack([pos, pos, pos], axis=0)
+
+
+# -------------------------------------------------------------------- SwiGLU
+def swiglu_params(key, d: int, d_ff: int, dtype=DEFAULT_DTYPE, abstract=False):
+    k1, k2, k3 = jax.random.split(key, 3) if not abstract else (None,) * 3
+    return {
+        "wi": init_dense(k1, d, d_ff, dtype, abstract=abstract),
+        "wg": init_dense(k2, d, d_ff, dtype, abstract=abstract),
+        "wo": init_dense(k3, d_ff, d, dtype, abstract=abstract),
+    }
+
+
+def swiglu(p, x: jnp.ndarray) -> jnp.ndarray:
+    return dense(p["wo"], jax.nn.silu(dense(p["wg"], x)) * dense(p["wi"], x))
+
+
+# ----------------------------------------------------------------- attention
+def causal_mask(q_len: int, kv_len: int, q_offset: int = 0) -> jnp.ndarray:
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    return q_pos >= k_pos
+
+
+def local_mask(q_len: int, kv_len: int, window: int, q_offset: int = 0) -> jnp.ndarray:
+    q_pos = jnp.arange(q_len)[:, None] + q_offset
+    k_pos = jnp.arange(kv_len)[None, :]
+    return (q_pos >= k_pos) & (q_pos - k_pos < window)
+
+
+def gqa_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None,
+                  scale: Optional[float] = None) -> jnp.ndarray:
+    """Grouped-query attention.
+
+    q: [B, T, Hq, D], k/v: [B, S, Hkv, D'], mask: [T, S] or [B, T, S].
+    Uses the XLA path; the Pallas flash kernel (repro.kernels) replaces this
+    on TPU via repro.kernels.ops.attention.
+    """
+    B, T, Hq, D = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, T, Hkv, rep, D)
+    logits = jnp.einsum("bthrd,bshd->bhrts", qg.astype(jnp.float32) * scale,
+                        k.astype(jnp.float32))
+    if mask is not None:
+        m = mask if mask.ndim == 3 else mask[None]
+        logits = jnp.where(m[:, None, None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhrts,bshe->bthre", w, v.astype(jnp.float32))
+    return out.reshape(B, T, Hq, v.shape[-1]).astype(q.dtype)
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 ignore_index: int = -100) -> jnp.ndarray:
+    """Mean token cross-entropy in fp32, masking ``ignore_index`` labels.
+
+    The gold logit is extracted with a one-hot select-reduce instead of
+    ``take_along_axis``: a dynamic gather along the vocab axis defeats SPMD
+    when the vocab is TP-sharded (XLA all-gathers the full [B,T,V] f32
+    logits — measured 33.6 GB/step on seamless train_4k, §Perf iteration
+    3), while compare+select+reduce stays shard-local and meets the labels
+    with one tiny [B,T] all-reduce.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    valid = labels != ignore_index
+    safe = jnp.where(valid, labels, 0)
+    vocab_iota = jax.lax.broadcasted_iota(
+        safe.dtype, (1,) * safe.ndim + (logits.shape[-1],), safe.ndim)
+    onehot = safe[..., None] == vocab_iota
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    loss = jnp.where(valid, lse - gold, 0.0)
+    return loss.sum() / jnp.maximum(valid.sum(), 1)

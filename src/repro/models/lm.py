@@ -1,0 +1,442 @@
+"""Model assembly: CausalLM (dense / MoE / SSM / hybrid / VLM-backbone) and
+EncDecLM (Seamless-style), built from repro.models.blocks per ArchConfig.
+
+Layer stacks are grouped into homogeneous *segments* scanned with
+``jax.lax.scan`` (fast compiles at 60+ layers, remat-friendly):
+
+  * uniform models     -> one segment of L layers
+  * DeepSeek (first_dense=k) -> [dense x k][moe x (L-k)]
+  * RecurrentGemma (pattern rec,rec,attn) -> [superblock x L//3][tail]
+
+Public API (returned by ``build_model``):
+  init(key)                      -> params
+  loss(params, batch)            -> scalar  (batch: tokens/labels[/embeds])
+  prefill(params, batch)         -> (logits_last, cache)
+  decode_step(params, cache, tok, pos) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .blocks import (attn_apply, attn_init, ffn_apply, ffn_init, mla_apply,
+                     mla_init, moe_apply, moe_init, rglru_apply, rglru_init,
+                     ssd_apply, ssd_init, AttnDims)
+from .layers import (DEFAULT_DTYPE, dense, init_dense, rmsnorm,
+                     rmsnorm_params, softmax_xent)
+from .sharding import ShardCtx
+
+__all__ = ["Model", "build_model", "Segment"]
+
+
+# ---------------------------------------------------------------- sublayers
+_MIXER_INIT = {"attn": attn_init, "mla": mla_init, "ssm": ssd_init,
+               "rec": rglru_init}
+_MIXER_APPLY = {"attn": attn_apply, "mla": mla_apply, "ssm": ssd_apply,
+                "rec": rglru_apply}
+
+
+def _mixer_kind(cfg: ArchConfig, layer: int) -> str:
+    kind = cfg.layer_kind(layer)
+    if kind == "attn" and cfg.use_mla:
+        return "mla"
+    return kind
+
+
+def _layer_init(key, cfg: ArchConfig, ctx: ShardCtx, layer: int,
+                cross: bool = False):
+    kind = _mixer_kind(cfg, layer)
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {
+        "ln1": rmsnorm_params(cfg.d_model),
+        "mix": _MIXER_INIT[kind](ks[0], cfg, ctx),
+    }
+    if cfg.family != "ssm":                     # mamba2 blocks have no FFN
+        p["ln2"] = rmsnorm_params(cfg.d_model)
+        if cfg.is_moe_layer(layer):
+            p["ffn_moe"] = moe_init(ks[1], cfg, ctx)
+        else:
+            p["ffn"] = ffn_init(ks[1], cfg, ctx)
+    if cross:
+        p["ln_x"] = rmsnorm_params(cfg.d_model)
+        p["xattn"] = attn_init(ks[2], cfg, ctx)
+    return p
+
+
+def _layer_apply(p, x, *, cfg: ArchConfig, ctx: ShardCtx, kind: str,
+                 is_moe: bool, mode: str, cache=None, pos=0,
+                 memory=None, window: int = 0):
+    """One decoder layer. Returns (x, new_cache)."""
+    h, mix_cache = _MIXER_APPLY[kind](
+        p["mix"], rmsnorm(p["ln1"], x, cfg.norm_eps), cfg=cfg, ctx=ctx,
+        mode=mode, cache=None if cache is None else cache.get("mix"),
+        pos=pos, window=window)
+    x = x + h
+    new_cache: Dict[str, Any] = {}
+    if mix_cache is not None:
+        new_cache["mix"] = mix_cache
+    if "xattn" in p and (memory is not None
+                         or (cache is not None and "xk" in cache)):
+        # cross-attention over encoder memory (no causal mask, no rope cache)
+        from .layers import gqa_attention
+        B, T, D = x.shape
+        dims = AttnDims.of(cfg, ctx)
+        xs = rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        q = dense(p["xattn"]["wq"], xs).reshape(B, T, dims.n_q, dims.hd)
+        if cache is not None and "xk" in cache:
+            k, v = cache["xk"], cache["xv"]
+        else:
+            S = memory.shape[1]
+            k = dense(p["xattn"]["wk"], memory).reshape(B, S, dims.n_kv, dims.hd)
+            v = dense(p["xattn"]["wv"], memory).reshape(B, S, dims.n_kv, dims.hd)
+        if mode in ("prefill", "decode"):
+            new_cache["xk"], new_cache["xv"] = k, v
+        if dims.n_kv != dims.n_q:
+            qmap = dims.q_to_kv(cfg)
+            k = jnp.take(k, qmap, axis=2)
+            v = jnp.take(v, qmap, axis=2)
+        o = gqa_attention(q, k, v, mask=None)
+        x = x + dense(p["xattn"]["wo"], o.reshape(B, T, dims.n_q * dims.hd))
+    if "ffn" in p or "ffn_moe" in p:
+        h2 = rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if is_moe:
+            x = x + moe_apply(p["ffn_moe"], h2, cfg=cfg, ctx=ctx, mode=mode)
+        else:
+            x = x + ffn_apply(p["ffn"], h2, cfg=cfg, ctx=ctx)
+    return x, (new_cache or None)
+
+
+# ----------------------------------------------------------------- segments
+@dataclass(frozen=True)
+class Segment:
+    """``count`` repetitions of the sublayer pattern ``kinds``; each entry is
+    (mixer_kind, is_moe, window)."""
+
+    count: int
+    kinds: Tuple[Tuple[str, bool, int], ...]
+    cross: bool = False
+
+    @property
+    def layers_per_block(self) -> int:
+        return len(self.kinds)
+
+
+def plan_segments(cfg: ArchConfig) -> List[Segment]:
+    window = cfg.window
+    if cfg.block_pattern:                                    # hybrid
+        unit = tuple((_mixer_kind(cfg, i), cfg.is_moe_layer(i),
+                      window if cfg.block_pattern[i % len(cfg.block_pattern)] == "attn" else 0)
+                     for i in range(len(cfg.block_pattern)))
+        n_units = cfg.n_layers // len(cfg.block_pattern)
+        segs = [Segment(n_units, unit)] if n_units else []
+        rem = cfg.n_layers - n_units * len(cfg.block_pattern)
+        if rem:
+            tail = tuple((_mixer_kind(cfg, i), cfg.is_moe_layer(i),
+                          window if cfg.block_pattern[i % len(cfg.block_pattern)] == "attn" else 0)
+                         for i in range(rem))
+            segs.append(Segment(1, tail))
+        return segs
+    if cfg.n_experts and cfg.first_dense:
+        w = window
+        return [Segment(cfg.first_dense, ((_mixer_kind(cfg, 0), False, w),)),
+                Segment(cfg.n_layers - cfg.first_dense,
+                        ((_mixer_kind(cfg, cfg.first_dense), True, w),))]
+    return [Segment(cfg.n_layers,
+                    ((_mixer_kind(cfg, 0), cfg.n_experts > 0, window),),
+                    cross=cfg.enc_layers > 0)]
+
+
+# -------------------------------------------------------------------- model
+@dataclass
+class Model:
+    cfg: ArchConfig
+    ctx: ShardCtx
+    segments: List[Segment]
+    remat: bool = False
+    dtype: Any = DEFAULT_DTYPE
+    #: unroll the layer scan at trace time — used by the roofline analysis
+    #: pass, because XLA cost_analysis counts a scan body ONCE regardless of
+    #: trip count; unrolled lowering makes HLO FLOPs/bytes/collectives exact.
+    unroll: bool = False
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab padded to a fixed TP multiple (Megatron-style) so the
+        embedding/unembedding shard over the model axis for EVERY arch —
+        unsharded full-vocab logits cost 16 GB/chip f32 at 4k x 16 batch
+        (§Perf iteration 3, seamless/mamba2 whose vocabs are not
+        16-divisible). Padded logits are masked to -inf: exact."""
+        from .sharding import pad_to_multiple
+        return pad_to_multiple(self.cfg.vocab, self.ctx.head_pad)
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Dict[str, Any]:
+        cfg, ctx = self.cfg, self.ctx
+        ks = iter(jax.random.split(key, 64))
+        scale = 1.0 / math.sqrt(cfg.d_model)
+        p: Dict[str, Any] = {
+            "embed": (jax.random.normal(next(ks),
+                                        (self.vocab_padded, cfg.d_model),
+                                        jnp.float32) * scale).astype(self.dtype),
+            "ln_f": rmsnorm_params(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            p["unembed"] = init_dense(next(ks), cfg.d_model,
+                                      self.vocab_padded, self.dtype)
+        for si, seg in enumerate(self.segments):
+            keys = jax.random.split(next(ks), seg.count)
+            def one(k):
+                sub = jax.random.split(k, seg.layers_per_block)
+                return [
+                    _layer_init(sub[i], cfg, self.ctx, self._abs_layer(si, 0, i),
+                                cross=seg.cross)
+                    for i in range(seg.layers_per_block)]
+            p[f"seg{si}"] = jax.vmap(one)(keys)
+        if cfg.enc_layers:
+            keys = jax.random.split(next(ks), cfg.enc_layers)
+            p["encoder"] = jax.vmap(
+                lambda k: _layer_init(k, cfg, self.ctx, 0))(keys)
+            p["enc_ln_f"] = rmsnorm_params(cfg.d_model)
+        if cfg.mtp:
+            p["mtp_proj"] = init_dense(next(ks), 2 * cfg.d_model, cfg.d_model,
+                                       self.dtype)
+            p["mtp_layer"] = jax.vmap(
+                lambda k: _layer_init(k, cfg, self.ctx, cfg.n_layers - 1)
+            )(jax.random.split(next(ks), 1))
+        return p
+
+    def _abs_layer(self, si: int, block: int, i: int) -> int:
+        off = sum(s.count * s.layers_per_block for s in self.segments[:si])
+        return off + block * self.segments[si].layers_per_block + i
+
+    @staticmethod
+    def _remat_block(count: int) -> int:
+        """Largest divisor of ``count`` not exceeding ~sqrt(count), capped
+        at 8 (sqrt-remat block size). 1 disables nesting."""
+        import os
+        if os.environ.get("REPRO_BASELINE_FLAT_REMAT") == "1":
+            return 1                                # §Perf kill-switch
+        best = 1
+        limit = min(8, int(count ** 0.5) + 1)
+        for r in range(2, limit + 1):
+            if count % r == 0:
+                best = r
+        return best
+
+    # ------------------------------------------------------------- backbone
+    def _run_segments(self, p, x, mode: str, caches=None, pos=0, memory=None):
+        """Returns (x, new_caches: list per segment)."""
+        new_caches = []
+        for si, seg in enumerate(self.segments):
+            seg_p = p[f"seg{si}"]
+            seg_cache = None if caches is None else caches[si]
+
+            def block(carry, xs):
+                h = carry
+                params_b, cache_b = xs
+                outs = []
+                for i in range(seg.layers_per_block):
+                    kind, is_moe, window = seg.kinds[i]
+                    c_i = None if cache_b is None else cache_b[i]
+                    h, nc = _layer_apply(
+                        params_b[i], h, cfg=self.cfg, ctx=self.ctx, kind=kind,
+                        is_moe=is_moe, mode=mode, cache=c_i, pos=pos,
+                        memory=memory, window=window)
+                    outs.append(nc)
+                return h, outs
+
+            body = block
+            if self.remat and mode == "train":
+                body = jax.checkpoint(block, prevent_cse=False)
+            r = self._remat_block(seg.count) if (self.remat
+                                                 and mode == "train"
+                                                 and not self.unroll
+                                                 and seg_cache is None) else 1
+            if r > 1:
+                # sqrt-remat: scan over count/r checkpointed blocks of r
+                # layers — the backward saves carries only at block
+                # boundaries (count/r of them instead of count), trading one
+                # extra forward for an r-fold cut of the carry stack
+                # (§Perf iteration 2: the stacked-carry buffer dominated
+                # every train cell's temp memory).
+                nb = seg.count // r
+                seg_p_r = jax.tree.map(
+                    lambda a: a.reshape(nb, r, *a.shape[1:]), seg_p)
+
+                def outer(c, pp_r):
+                    # per-layer remat stays ON inside the rematted outer
+                    # block: its backward replay then only keeps one layer's
+                    # intermediates live at a time
+                    return jax.lax.scan(
+                        lambda c2, pp: body(c2, (pp, None)), c, pp_r)
+
+                outer_ck = jax.checkpoint(outer, prevent_cse=False)
+                x, outs = jax.lax.scan(outer_ck, x, seg_p_r)
+            elif self.unroll:
+                outs_list = []
+                for bi in range(seg.count):
+                    p_b = jax.tree.map(lambda a: a[bi], seg_p)
+                    c_b = (None if seg_cache is None
+                           else jax.tree.map(lambda a: a[bi], seg_cache))
+                    x, o = body(x, (p_b, c_b))
+                    outs_list.append(o)
+                outs = (None if all(o is None for o in outs_list) else
+                        jax.tree.map(lambda *ls: jnp.stack(ls), *outs_list))
+            elif seg_cache is None:
+                x, outs = jax.lax.scan(
+                    lambda c, pp: body(c, (pp, None)), x, seg_p)
+            else:
+                x, outs = jax.lax.scan(body, x, (seg_p, seg_cache))
+            new_caches.append(outs)
+        return x, new_caches
+
+    def _embed(self, p, batch) -> jnp.ndarray:
+        if "inputs_embeds" in batch:
+            x = batch["inputs_embeds"].astype(self.dtype)
+        else:
+            x = jnp.take(p["embed"], batch["tokens"], axis=0)
+        return self.ctx.act(x, ("batch", None, None))
+
+    def _logits(self, p, x) -> jnp.ndarray:
+        x = rmsnorm(p["ln_f"], x, self.cfg.norm_eps)
+        if self.cfg.tie_embeddings:
+            logits = x @ p["embed"].T
+        else:
+            logits = dense(p["unembed"], x)
+        if self.vocab_padded != self.cfg.vocab:
+            # mask the padded vocab tail (stays shard-local: iota compare)
+            iota = jax.lax.broadcasted_iota(
+                jnp.int32, (1,) * (logits.ndim - 1) + (self.vocab_padded,),
+                logits.ndim - 1)
+            logits = jnp.where(iota < self.cfg.vocab, logits, -1e30)
+        return self.ctx.act(logits, ("batch", None, "model"))
+
+    def _encode(self, p, src_embeds) -> jnp.ndarray:
+        x = self.ctx.act(src_embeds.astype(self.dtype), ("batch", None, None))
+        def block(h, params_b):
+            from .blocks import attn_apply as _aa
+            hh, _ = _aa(params_b["mix"], rmsnorm(params_b["ln1"], h,
+                                                 self.cfg.norm_eps),
+                        cfg=self.cfg, ctx=self.ctx, mode="encode")
+            h = h + hh
+            h = h + ffn_apply(params_b["ffn"],
+                              rmsnorm(params_b["ln2"], h, self.cfg.norm_eps),
+                              cfg=self.cfg, ctx=self.ctx)
+            return h, None
+        x, _ = jax.lax.scan(block, x, p["encoder"])
+        return rmsnorm(p["enc_ln_f"], x, self.cfg.norm_eps)
+
+    # ----------------------------------------------------------------- train
+    def loss(self, p, batch) -> jnp.ndarray:
+        memory = None
+        if self.cfg.enc_layers:
+            memory = self._encode(p, batch["src_embeds"])
+        x = self._embed(p, batch)
+        x, _ = self._run_segments(p, x, "train", memory=memory)
+        logits = self._logits(p, x)
+        loss = softmax_xent(logits, batch["labels"])
+        if self.cfg.mtp and "labels2" in batch:
+            # DeepSeek-V3 multi-token prediction: one extra depth step
+            emb2 = jnp.take(p["embed"], batch["labels"].clip(0), axis=0)
+            h2 = dense(p["mtp_proj"],
+                       jnp.concatenate([x, emb2.astype(x.dtype)], -1))
+            kind, is_moe, window = self.segments[-1].kinds[0]
+            mtp_p = jax.tree.map(lambda a: a[0], p["mtp_layer"])
+            h2, _ = _layer_apply(mtp_p, h2, cfg=self.cfg, ctx=self.ctx,
+                                 kind=kind, is_moe=is_moe, mode="train",
+                                 window=window)
+            loss = loss + 0.3 * softmax_xent(self._logits(p, h2),
+                                             batch["labels2"])
+        return loss
+
+    # --------------------------------------------------------------- serving
+    def prefill(self, p, batch, caches=None, pos=0):
+        """Full prefill, or *suffix* prefill resuming from a reused prefix
+        cache (``caches`` from a previous prefill of the first ``pos``
+        tokens) — the data plane of Stage-1 KV reuse."""
+        memory = None
+        if self.cfg.enc_layers:
+            memory = self._encode(p, batch["src_embeds"])
+        x = self._embed(p, batch)
+        x, caches = self._run_segments(p, x, "prefill", caches=caches,
+                                       pos=pos, memory=memory)
+        logits = self._logits(p, x[:, -1:])
+        return logits, caches
+
+    def decode_step(self, p, caches, tok, pos, memory=None):
+        """tok: [B, 1] int32 (or embeds [B,1,D]); pos: scalar int32."""
+        if tok.dtype in (jnp.int32, jnp.int64):
+            x = jnp.take(p["embed"], tok, axis=0)
+        else:
+            x = tok.astype(self.dtype)
+        x = self.ctx.act(x, ("batch", None, None))
+        x, caches = self._run_segments(p, x, "decode", caches=caches, pos=pos,
+                                       memory=memory)
+        return self._logits(p, x), caches
+
+    # ---------------------------------------------------------- cache specs
+    def init_cache(self, batch_size: int, max_len: int,
+                   kv_dtype=DEFAULT_DTYPE, src_len: int = 0):
+        """Concrete zero-filled cache pytree (use eval_shape for abstract).
+
+        Attention caches store the REAL kv-head count (padded MHA heads are
+        exact no-ops — attn_apply crops on insert and expands on load), so
+        decode HBM residency never pays for TP head padding. ``kv_dtype``
+        may be int8 for HBM-bound cells. Enc-dec models additionally get
+        cross-attention K/V over ``src_len`` encoder positions.
+        """
+        cfg, ctx = self.cfg, self.ctx
+        caches = []
+        for seg in self.segments:
+            def one_layer(kind, window):
+                if kind == "mla":
+                    S = max_len
+                    return {"mix": {
+                        "c": jnp.zeros((batch_size, S, cfg.kv_lora_rank), kv_dtype),
+                        "kr": jnp.zeros((batch_size, S, cfg.rope_head_dim), kv_dtype)}}
+                if kind == "attn":
+                    dims = AttnDims.of(cfg, ctx)
+                    S = min(max_len, window) if window else max_len
+                    return {"mix": {
+                        "k": jnp.zeros((batch_size, S, cfg.n_kv, dims.hd), kv_dtype),
+                        "v": jnp.zeros((batch_size, S, cfg.n_kv, dims.hd), kv_dtype)}}
+                if kind == "ssm":
+                    d_in = cfg.ssm_expand * cfg.d_model
+                    H = d_in // cfg.ssm_head_dim
+                    return {"mix": {
+                        "conv": jnp.zeros((batch_size, cfg.ssm_conv - 1,
+                                           d_in + 2 * cfg.ssm_state), kv_dtype),
+                        "state": jnp.zeros((batch_size, H, cfg.ssm_head_dim,
+                                            cfg.ssm_state), jnp.float32)}}
+                w = cfg.rglru_width or cfg.d_model
+                return {"mix": {
+                    "conv": jnp.zeros((batch_size, cfg.ssm_conv - 1, w), kv_dtype),
+                    "state": jnp.zeros((batch_size, w), jnp.float32)}}
+
+            def with_cross(entry):
+                if cfg.enc_layers and src_len:
+                    dims = AttnDims.of(cfg, ctx)
+                    entry["xk"] = jnp.zeros(
+                        (batch_size, src_len, dims.n_kv, dims.hd), kv_dtype)
+                    entry["xv"] = jnp.zeros(
+                        (batch_size, src_len, dims.n_kv, dims.hd), kv_dtype)
+                return entry
+
+            layer_caches = [
+                jax.tree.map(lambda a: jnp.broadcast_to(a[None], (seg.count,) + a.shape),
+                             with_cross(one_layer(kind, window)))
+                for (kind, _moe, window) in seg.kinds]
+            caches.append(layer_caches)
+        return caches
+
+
+def build_model(cfg: ArchConfig, ctx: Optional[ShardCtx] = None,
+                remat: bool = False) -> Model:
+    return Model(cfg=cfg, ctx=ctx or ShardCtx(), segments=plan_segments(cfg),
+                 remat=remat)

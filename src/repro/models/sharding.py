@@ -1,0 +1,131 @@
+"""Sharding context: logical-axis annotations for the production mesh.
+
+Mesh axes: ("data", "model") single-pod, ("pod", "data", "model") multi-pod.
+
+  * batch dims            -> ("pod", "data")    (pure DP across pods)
+  * attention heads, d_ff,
+    experts               -> "model"            (TP / EP)
+  * parameters' d_model
+    (first) dim           -> "data" when zero3  (ZeRO-3 / FSDP resharding)
+
+Head-count divisibility: query heads are padded up to a multiple of the model
+axis (zero-initialised W_q rows + zero W_o columns, so padded heads are exact
+no-ops); KV heads are sharded when divisible by the model axis, otherwise the
+KV tensor stays replicated across "model" and is broadcast into the padded
+query-head layout at use (constrained so each device materialises only its
+own slice).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["ShardCtx", "pad_to_multiple"]
+
+
+def pad_to_multiple(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+@dataclass
+class ShardCtx:
+    """Carries the mesh + axis names through model construction.
+
+    ``mesh=None`` (CPU smoke tests) turns every annotation into a no-op and
+    makes shard_map-based blocks fall back to their single-device path.
+
+    ``ep_axes`` selects the expert-parallel mesh axes for MoE layers:
+    ("model",) is classic EP-within-TP; ("data", "model") spreads experts
+    over the full pod (DeepSeek-V3-scale models whose expert weights cannot
+    fit a 16-way shard) with token dispatch over the combined axis.
+
+    ``kv_seq_shard`` switches decode-mode KV caches to *sequence* sharding
+    over the model axis (flash-decoding style): each model shard holds
+    S/model_size cache slots and XLA assembles the softmax over the sharded
+    length. This keeps GQA KV heads unpadded/unreplicated — the only layout
+    under which 32k-context decode fits HBM for kv-light GQA archs.
+    """
+
+    mesh: Optional[Mesh] = None
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    zero3: bool = False            # shard params' d_model dim over data too
+    zero3_axes: Tuple[str, ...] = ("data",)
+    ep_axes: Tuple[str, ...] = ("model",)
+    kv_seq_shard: bool = False
+    #: heads are padded to a multiple of this REGARDLESS of the live mesh, so
+    #: the parameter layout is mesh-independent: a checkpoint written on any
+    #: mesh (1..16-wide model axis) reshards onto any other without reshape.
+    head_pad: int = 16
+
+    @property
+    def head_multiple(self) -> int:
+        m = self.model_size
+        return self.head_pad * ((m + self.head_pad - 1) // self.head_pad) \
+            if m > self.head_pad else self.head_pad
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def ep_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.ep_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def data_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for a in self.batch_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    # ------------------------------------------------------------ activations
+    def act(self, x, spec: Tuple) -> "jax.Array":
+        """Constrain activation sharding; spec entries: 'batch', 'model',
+        None. 'batch' expands to the (pod, data) axes tuple."""
+        if self.mesh is None:
+            return x
+        parts = []
+        for s in spec:
+            if s == "batch":
+                parts.append(self.batch_axes if len(self.batch_axes) > 1
+                             else self.batch_axes[0])
+            elif s == "model":
+                parts.append(self.model_axis)
+            else:
+                parts.append(None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*parts)))
+
+    # ------------------------------------------------------------- parameters
+    def pspec(self, *spec) -> P:
+        parts = []
+        for s in spec:
+            if s == "batch":
+                parts.append(self.batch_axes if len(self.batch_axes) > 1
+                             else self.batch_axes[0])
+            elif s == "model":
+                parts.append(self.model_axis)
+            elif s == "zero3":
+                parts.append((self.zero3_axes if len(self.zero3_axes) > 1
+                              else self.zero3_axes[0]) if self.zero3 else None)
+            else:
+                parts.append(None)
+        return P(*parts)
+
+    def named(self, *spec) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.pspec(*spec))

@@ -1,0 +1,191 @@
+"""Priority-aware fluid (rate-based) flow model — the flowsim analogue.
+
+Bandwidth allocation semantics (matching §5's enforcement model):
+
+  1. Active flows are grouped by ``priority_key`` (lexicographic tuples,
+     smaller = more urgent) and groups are served in **strict priority**
+     order: a group only sees the capacity left over by more urgent groups.
+  2. Within a group, bandwidth is **max-min fair** (progressive filling),
+     honouring per-flow ``rate_cap`` ceilings (Karuna-style pacing).
+  3. Flows whose route is empty (same-endpoint transfers) complete at the
+     memory-copy rate ``LOCAL_BW``.
+
+Between events rates are constant, so completion times are exact; the event
+loop re-allocates whenever the active set, keys or caps change. This is the
+standard fluid approximation used by flow-level simulators (flowsim, Sincronia,
+Karuna) — per-packet effects (reordering etc.) are *designed out* of MFS by
+message-atomic promotion, so the fluid model is faithful for this paper.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from ..core.msflow import Flow, FlowState
+from .topology import Topology
+
+__all__ = ["FluidNet", "LOCAL_BW"]
+
+LOCAL_BW = 2e12      # same-endpoint "transfer" drains at HBM-copy speed
+_EPS = 1e-12         # rate/capacity epsilon
+_EPS_BYTES = 1e-4    # a flow with less than this many bytes left is done
+
+
+class FluidNet:
+    def __init__(self, topo: Topology):
+        self.topo = topo
+        self.flows: Dict[int, Flow] = {}
+        self.routes: Dict[int, Tuple[int, ...]] = {}
+        self.now = 0.0
+        self._link_rate: Dict[int, float] = {}      # post-allocation usage
+        self._link_members: Dict[int, List[Flow]] = {}
+
+    # ------------------------------------------------------------- lifecycle
+    def add(self, flow: Flow) -> None:
+        self.flows[flow.fid] = flow
+        self.routes[flow.fid] = self.topo.route(flow.src, flow.dst, flow.fid)
+        flow.state = FlowState.ACTIVE if flow.state != FlowState.PRUNED else flow.state
+        if flow.started is None:
+            flow.started = self.now
+
+    def remove(self, flow: Flow) -> None:
+        self.flows.pop(flow.fid, None)
+        self.routes.pop(flow.fid, None)
+
+    def advance(self, t: float) -> List[Flow]:
+        """Progress all flows to time ``t`` at current rates; return the flows
+        that completed (remaining hits zero) in this interval."""
+        dt = t - self.now
+        if dt < -1e-9:
+            raise ValueError(f"time went backwards: {self.now} -> {t}")
+        done: List[Flow] = []
+        for f in self.flows.values():
+            if dt > 0 and f.rate > 0.0:
+                f.remaining = max(0.0, f.remaining - f.rate * dt)
+            # float-safe completion: anything within a sub-byte epsilon (or
+            # within one picosecond of draining at the current rate) is done —
+            # prevents completion-prediction livelock at time resolution.
+            if f.remaining <= max(_EPS_BYTES, f.rate * 1e-12):
+                f.remaining = 0.0
+                done.append(f)
+        self.now = t
+        for f in done:
+            f.state = FlowState.DONE
+            f.finished = t
+            f.rate = 0.0
+            self.remove(f)
+        return done
+
+    # ------------------------------------------------------------ allocation
+    def reallocate(self) -> None:
+        """Strict-priority, per-group max-min water-filling with rate caps."""
+        residual = dict(self.topo.capacity)
+        self._link_rate = {lid: 0.0 for lid in residual}
+        self._link_members = {}
+        groups: Dict[Tuple, List[Flow]] = {}
+        for f in self.flows.values():
+            groups.setdefault(tuple(f.priority_key), []).append(f)
+        for key in sorted(groups):
+            self._fill_group(groups[key], residual)
+
+    def _fill_group(self, members: List[Flow], residual: Dict[int, float]) -> None:
+        rate = {f.fid: 0.0 for f in members}
+        unfrozen = {f.fid: f for f in members}
+        # local (routeless) flows drain immediately at LOCAL_BW
+        for fid in list(unfrozen):
+            f = unfrozen[fid]
+            if not self.routes[fid]:
+                r = LOCAL_BW if f.rate_cap is None else min(LOCAL_BW, f.rate_cap)
+                rate[fid] = r
+                del unfrozen[fid]
+        while unfrozen:
+            # population of unfrozen flows per link
+            nflows: Dict[int, int] = {}
+            for fid in unfrozen:
+                for lid in self.routes[fid]:
+                    nflows[lid] = nflows.get(lid, 0) + 1
+            # smallest incremental fair share over saturating constraints
+            inc = math.inf
+            for lid, n in nflows.items():
+                inc = min(inc, max(0.0, residual[lid]) / n)
+            for fid, f in unfrozen.items():
+                if f.rate_cap is not None:
+                    inc = min(inc, f.rate_cap - rate[fid])
+            if inc < 0:
+                inc = 0.0
+            if not math.isfinite(inc):
+                break
+            for fid in unfrozen:
+                rate[fid] += inc
+                for lid in self.routes[fid]:
+                    residual[lid] -= inc
+            # freeze: flows at cap, flows crossing a saturated link
+            newly_frozen = []
+            for fid, f in unfrozen.items():
+                at_cap = f.rate_cap is not None and rate[fid] >= f.rate_cap - _EPS
+                saturated = any(residual[lid] <= _EPS for lid in self.routes[fid])
+                if at_cap or saturated:
+                    newly_frozen.append(fid)
+            if not newly_frozen:      # numerical guard: freeze everything
+                break
+            for fid in newly_frozen:
+                del unfrozen[fid]
+        for f in members:
+            f.rate = rate[f.fid]
+            for lid in self.routes[f.fid]:
+                self._link_rate[lid] = self._link_rate.get(lid, 0.0) + f.rate
+                self._link_members.setdefault(lid, []).append(f)
+
+    # --------------------------------------------------------------- queries
+    def next_completion(self) -> Optional[Tuple[float, Flow]]:
+        best_t, best_f = math.inf, None
+        for f in self.flows.values():
+            if f.rate > 0.0:
+                t = self.now + max(f.remaining / f.rate, 1e-12)
+                if t < best_t:
+                    best_t, best_f = t, f
+        if best_f is None:
+            return None
+        return best_t, best_f
+
+    def bottleneck(self, flow: Flow) -> Tuple[float, float]:
+        """(capacity, rho) of the flow's most-utilised path link, excluding
+        the flow's own contribution — feeds the MLU computation (§4.3)."""
+        route = self.routes.get(flow.fid)
+        if route is None:
+            route = self.topo.route(flow.src, flow.dst, flow.fid)
+        if not route:
+            return LOCAL_BW, 0.0
+        best_cap, best_rho = None, -1.0
+        for lid in route:
+            cap = self.topo.capacity[lid]
+            used = self._link_rate.get(lid, 0.0) - (flow.rate if flow.fid in self.flows else 0.0)
+            rho = min(1.0, max(0.0, used / cap))
+            if rho > best_rho or (rho == best_rho and (best_cap is None or cap < best_cap)):
+                best_cap, best_rho = cap, rho
+        return float(best_cap), float(best_rho)
+
+    def bottleneck_protected(self, flow: Flow, predicate) -> Tuple[float, float]:
+        """Like :meth:`bottleneck`, but rho only counts path traffic for which
+        ``predicate(other_flow)`` holds — i.e. traffic the candidate flow is
+        *not allowed to preempt*. Feeding this into MLU avoids the positive
+        feedback loop where contention from equally-deferred peers inflates
+        every peer's urgency simultaneously."""
+        route = self.routes.get(flow.fid)
+        if route is None:
+            route = self.topo.route(flow.src, flow.dst, flow.fid)
+        if not route:
+            return LOCAL_BW, 0.0
+        best_cap, best_rho = None, -1.0
+        for lid in route:
+            cap = self.topo.capacity[lid]
+            used = sum(f.rate for f in self._link_members.get(lid, ())
+                       if f.fid != flow.fid and predicate(f))
+            rho = min(1.0, max(0.0, used / cap))
+            if rho > best_rho or (rho == best_rho and (best_cap is None or cap < best_cap)):
+                best_cap, best_rho = cap, rho
+        return float(best_cap), float(best_rho)
+
+    def utilization(self) -> Dict[int, float]:
+        return {lid: self._link_rate.get(lid, 0.0) / cap
+                for lid, cap in self.topo.capacity.items()}

@@ -1,0 +1,20 @@
+"""repro.serving — JAX serving substrate with MFS-scheduled transfers.
+
+    PagedStore / PrefixIndex   — paged KV + content-addressed prefix reuse
+    ServingEngine              — jitted prefill / suffix-prefill (B=1)
+    DecodeBatch                — slotted continuous-batching decode
+    DisaggServer               — P/D-disaggregated orchestrator; every
+                                 transfer goes through submit/permit/
+                                 completion with a pluggable policy (§5)
+"""
+from .paged_kv import (PagedStore, PrefixIndex, PrefixEntry, cache_bytes,
+                       cache_has_state, is_token_leaf_path)
+from .engine import ServingEngine, DecodeBatch
+from .disagg import DisaggServer, DisaggConfig, ServeRequest, ServeResult
+
+__all__ = [
+    "PagedStore", "PrefixIndex", "PrefixEntry", "cache_bytes",
+    "cache_has_state", "is_token_leaf_path",
+    "ServingEngine", "DecodeBatch",
+    "DisaggServer", "DisaggConfig", "ServeRequest", "ServeResult",
+]

@@ -1,0 +1,276 @@
+"""Paged KV storage + content-addressed prefix index (Mooncake-style reuse).
+
+Two storage regimes, chosen per architecture:
+
+* **Pageable caches** (pure attention: GQA ``k``/``v``, MLA ``c``/``kr``) —
+  every cache leaf is token-indexed, so the store keeps one pool array per
+  leaf with the token axis reshaped to ``(n_pages, page_size)``. One logical
+  page id indexes every pool simultaneously; a page is the complete
+  per-token serving state, and any *page-aligned* prefix boundary is a valid
+  resume point for ``Model.prefill(caches=..., pos=...)``. Boundaries are
+  content-addressed by an incremental hash chain over token pages, so hot
+  prefixes dedupe across requests (the paper's "hot block / victim unit"
+  regime). Pages are reference-counted.
+
+* **Snapshot caches** (SSM / hybrid / enc-dec: recurrent ``state``, ``conv``
+  windows, window-cropped local-attention KV) — the serving state is O(1)
+  per sequence *at a specific token position*, not token-sliceable. The
+  index stores the whole (B=1) cache pytree snapshotted at end-of-prefill,
+  keyed by the exact token prefix; a match resumes from that position. This
+  mirrors how production stores treat linear-attention caches: cheap to
+  ship (constant size — the paper's §Arch-applicability note for Mamba2),
+  but only exact-prefix reusable.
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PagedStore", "PrefixIndex", "PrefixEntry", "cache_has_state",
+           "cache_bytes", "is_token_leaf_path"]
+
+# cache-leaf names with a *decode-token* axis in the stacked prefill layout
+# [seg_count, B, S, ...]; everything else is per-sequence state. Note
+# cross-attention xk/xv are indexed by *encoder* positions — per-sequence
+# constants as far as decode-token paging is concerned.
+_TOKEN_LEAVES = {"k", "v", "c", "kr"}
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return str(getattr(last, "key", getattr(last, "idx", last)))
+
+
+def _is_token_leaf(path) -> bool:
+    return _leaf_name(path) in _TOKEN_LEAVES
+
+
+def is_token_leaf_path(path) -> bool:
+    """Public: does this stacked-cache leaf have a token axis (axis 2)?"""
+    return _is_token_leaf(path)
+
+
+def cache_has_state(cache: Any) -> bool:
+    """True if any leaf is per-sequence state (forces snapshot storage)."""
+    return any(not _is_token_leaf(p)
+               for p, _ in jax.tree_util.tree_flatten_with_path(cache)[0])
+
+
+def cache_bytes(cache: Any) -> int:
+    """Total bytes of a cache pytree (sizes Stage-1/Stage-3 flows)."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree_util.tree_leaves(cache))
+
+
+class _Allocator:
+    def __init__(self, n_pages: int):
+        self.free: List[int] = list(range(n_pages - 1, -1, -1))
+        self.refs: Dict[int, int] = {}
+
+    def alloc(self, n: int) -> List[int]:
+        if len(self.free) < n:
+            raise MemoryError(f"paged KV pool exhausted ({n} pages needed, "
+                              f"{len(self.free)} free)")
+        pages = [self.free.pop() for _ in range(n)]
+        for p in pages:
+            self.refs[p] = 1
+        return pages
+
+    def retain(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            self.refs[p] += 1
+
+    def release(self, pages: Sequence[int]) -> None:
+        for p in pages:
+            self.refs[p] -= 1
+            if self.refs[p] == 0:
+                del self.refs[p]
+                self.free.append(p)
+
+    @property
+    def n_free(self) -> int:
+        return len(self.free)
+
+
+class PagedStore:
+    """Page pools for every token-indexed leaf of a pageable prefill cache."""
+
+    def __init__(self, page_size: int = 16, n_pages: int = 512):
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.alloc = _Allocator(n_pages)
+        self._pools: Dict[str, jnp.ndarray] = {}
+        self._treedef = None
+        self._keys: List[str] = []
+
+    def _ensure_pools(self, cache: Any) -> None:
+        leaves = jax.tree_util.tree_flatten_with_path(cache)[0]
+        if self._treedef is not None:
+            return
+        self._treedef = jax.tree_util.tree_structure(cache)
+        for path, leaf in leaves:
+            if not _is_token_leaf(path):
+                raise ValueError(
+                    f"PagedStore got a state leaf {jax.tree_util.keystr(path)}"
+                    " — use snapshot storage for this architecture")
+            key = jax.tree_util.keystr(path)
+            self._keys.append(key)
+            shp = list(leaf.shape)
+            del shp[1]                               # drop B
+            shp[1:2] = [self.n_pages, self.page_size]
+            self._pools[key] = jnp.zeros(tuple(shp), leaf.dtype)
+
+    def put(self, cache: Any, n_tokens: int) -> List[int]:
+        """Write one request's (B=1) stacked prefill cache into fresh pages.
+
+        Returns the page ids (len = ceil(n_tokens / page_size)); the
+        trailing partial page is zero-padded.
+        """
+        self._ensure_pools(cache)
+        ps = self.page_size
+        n_pg = -(-n_tokens // ps)
+        pages = self.alloc.alloc(n_pg)
+        idx = jnp.asarray(pages, jnp.int32)
+        for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+            key = jax.tree_util.keystr(path)
+            x = leaf[:, 0]                           # [count, S, feat...]
+            if x.shape[1] < n_tokens:
+                raise ValueError(f"leaf {key} shorter than n_tokens — "
+                                 "window-cropped caches are snapshot-only")
+            x = x[:, :n_tokens]
+            pad = n_pg * ps - n_tokens
+            if pad:
+                x = jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+            x = x.reshape(x.shape[0], n_pg, ps, *x.shape[2:])
+            self._pools[key] = self._pools[key].at[:, idx].set(x)
+        return pages
+
+    def gather(self, pages: Sequence[int], n_tokens: int) -> Any:
+        """Rebuild a (B=1) prefix cache pytree from pages."""
+        if self._treedef is None:
+            raise RuntimeError("gather before any put")
+        idx = jnp.asarray(list(pages), jnp.int32)
+        out = []
+        for key in self._keys:
+            x = jnp.take(self._pools[key], idx, axis=1)
+            x = x.reshape(x.shape[0], -1, *x.shape[3:])[:, :n_tokens]
+            out.append(x[:, None])                    # restore B=1
+        return jax.tree_util.tree_unflatten(self._treedef, out)
+
+    def release(self, pages: Sequence[int]) -> None:
+        self.alloc.release(pages)
+
+    def retain(self, pages: Sequence[int]) -> None:
+        self.alloc.retain(pages)
+
+    def pool_bytes(self) -> int:
+        return sum(p.size * p.dtype.itemsize for p in self._pools.values())
+
+
+# =====================================================================
+# Prefix index
+# =====================================================================
+@dataclass
+class PrefixEntry:
+    pages: List[int]                 # empty for snapshot entries
+    n_tokens: int
+    owner_unit: int
+    snapshot: Optional[Any] = None   # full cache pytree (snapshot regime)
+    bytes: int = 0                   # transfer size of this prefix
+    hits: int = 0
+
+
+def _page_hash_chain(tokens: np.ndarray, page_size: int) -> List[bytes]:
+    out: List[bytes] = []
+    h = hashlib.sha256()
+    for i in range(len(tokens) // page_size):
+        h.update(np.ascontiguousarray(
+            tokens[i * page_size:(i + 1) * page_size],
+            dtype=np.int32).tobytes())
+        out.append(h.digest())
+    return out
+
+
+def _exact_hash(tokens: np.ndarray) -> bytes:
+    return hashlib.sha256(
+        np.ascontiguousarray(tokens, dtype=np.int32).tobytes()).digest()
+
+
+class PrefixIndex:
+    """Content-addressed map: token-prefix -> reusable cached prefix."""
+
+    def __init__(self, store: PagedStore):
+        self.store = store
+        self._paged: Dict[bytes, PrefixEntry] = {}
+        self._snap: Dict[bytes, PrefixEntry] = {}
+        self._snap_lengths: Set[int] = set()
+
+    # ---------------------------------------------------------------- match
+    def match(self, tokens: np.ndarray) -> Optional[PrefixEntry]:
+        """Longest reusable prefix of ``tokens``."""
+        tokens = np.asarray(tokens)
+        best: Optional[PrefixEntry] = None
+        chain = _page_hash_chain(tokens, self.store.page_size)
+        for key in reversed(chain):
+            e = self._paged.get(key)
+            if e is not None:
+                best = e
+                break
+        for n in sorted(self._snap_lengths, reverse=True):
+            if best is not None and n <= best.n_tokens:
+                break
+            if n > len(tokens):
+                continue
+            e = self._snap.get(_exact_hash(tokens[:n]))
+            if e is not None:
+                best = e
+                break
+        if best is not None:
+            best.hits += 1
+        return best
+
+    # --------------------------------------------------------------- insert
+    def insert_paged(self, tokens: np.ndarray, pages: List[int],
+                     owner_unit: int, per_token_bytes: float) -> int:
+        """Register every full-page boundary of a pageable cache."""
+        tokens = np.asarray(tokens)
+        chain = _page_hash_chain(tokens, self.store.page_size)
+        added = 0
+        for i, key in enumerate(chain):
+            if key in self._paged:
+                continue
+            pg = pages[:i + 1]
+            self.store.retain(pg)
+            n_tok = (i + 1) * self.store.page_size
+            self._paged[key] = PrefixEntry(
+                pages=list(pg), n_tokens=n_tok, owner_unit=owner_unit,
+                bytes=int(n_tok * per_token_bytes))
+            added += 1
+        return added
+
+    def insert_snapshot(self, tokens: np.ndarray, cache: Any,
+                        owner_unit: int) -> int:
+        """Register the end-of-prefill boundary of a snapshot cache."""
+        tokens = np.asarray(tokens)
+        key = _exact_hash(tokens)
+        if key in self._snap:
+            return 0
+        self._snap[key] = PrefixEntry(
+            pages=[], n_tokens=len(tokens), owner_unit=owner_unit,
+            snapshot=cache, bytes=cache_bytes(cache))
+        self._snap_lengths.add(len(tokens))
+        return 1
+
+    # ---------------------------------------------------------------- fetch
+    def fetch(self, entry: PrefixEntry) -> Any:
+        """Materialise the prefix cache pytree for ``Model.prefill``."""
+        if entry.snapshot is not None:
+            return entry.snapshot
+        return self.store.gather(entry.pages, entry.n_tokens)
+
+    def __len__(self) -> int:
+        return len(self._paged) + len(self._snap)

@@ -1,0 +1,102 @@
+"""Serving metrics — TTFT, SLO attainment, CCT, earliness (§6.1).
+
+SLO definition follows the paper: threshold = ``slo_scale`` (default 3x) times
+the TTFT measured under low-load (contention-free) conditions for the same
+request — computed analytically per request by the simulator's ideal path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+import numpy as np
+
+__all__ = ["CoflowRecord", "SimMetrics"]
+
+
+@dataclass
+class CoflowRecord:
+    cid: int
+    unit: int
+    layer: int
+    started: float
+    finished: float
+    size: float
+    ideal: float            # serialised transfer time at full line rate
+
+    @property
+    def cct(self) -> float:
+        return self.finished - self.started
+
+    @property
+    def slowdown(self) -> float:
+        return self.cct / max(self.ideal, 1e-12)
+
+
+@dataclass
+class SimMetrics:
+    policy: str = ""
+    ttft: Dict[int, float] = field(default_factory=dict)
+    deadline: Dict[int, float] = field(default_factory=dict)
+    arrival: Dict[int, float] = field(default_factory=dict)
+    ideal_ttft: Dict[int, float] = field(default_factory=dict)
+    stall_time: Dict[int, float] = field(default_factory=dict)
+    coflows: List[CoflowRecord] = field(default_factory=list)
+    pruned: int = 0
+
+    # ------------------------------------------------------------- summaries
+    def _rids(self):
+        return [r for r in self.ttft if r >= 0]      # exclude warm-up
+
+    def slo_attainment(self) -> float:
+        rids = self._rids()
+        if not rids:
+            return float("nan")
+        ok = sum(1 for r in rids if self.ttft[r] <= self.deadline[r] + 1e-9)
+        return ok / len(rids)
+
+    def ttft_stats(self):
+        v = np.array([self.ttft[r] for r in self._rids()])
+        if v.size == 0:
+            return {}
+        return {"mean": float(v.mean()), "p50": float(np.percentile(v, 50)),
+                "p90": float(np.percentile(v, 90)), "p99": float(np.percentile(v, 99))}
+
+    def normalized_ttft(self) -> float:
+        """Mean TTFT / mean ideal TTFT (contention inflation factor)."""
+        rids = self._rids()
+        if not rids:
+            return float("nan")
+        num = np.mean([self.ttft[r] for r in rids])
+        den = np.mean([self.ideal_ttft[r] for r in rids])
+        return float(num / max(den, 1e-12))
+
+    def mean_cct(self) -> float:
+        if not self.coflows:
+            return float("nan")
+        return float(np.mean([c.cct for c in self.coflows]))
+
+    def cct_slowdown(self) -> float:
+        if not self.coflows:
+            return float("nan")
+        return float(np.mean([c.slowdown for c in self.coflows]))
+
+    def earliness(self) -> np.ndarray:
+        """deadline - TTFT per request; positive = early, negative = miss."""
+        rids = self._rids()
+        return np.array([self.deadline[r] - self.ttft[r] for r in rids])
+
+    def positive_earliness(self) -> float:
+        e = self.earliness()
+        pos = e[e > 0]
+        return float(pos.mean()) if pos.size else 0.0
+
+    def summary(self) -> Dict[str, float]:
+        s = {"policy": self.policy, "n": len(self._rids()),
+             "slo_attainment": self.slo_attainment(),
+             "norm_ttft": self.normalized_ttft(),
+             "cct_slowdown": self.cct_slowdown(),
+             "pos_earliness": self.positive_earliness(),
+             "pruned": self.pruned}
+        s.update({f"ttft_{k}": v for k, v in self.ttft_stats().items()})
+        return s

@@ -1,0 +1,8 @@
+"""repro.training — optimizer, train step, checkpointing, fault tolerance."""
+from .optim import AdamWConfig, AdamWState, adamw_init, adamw_update, global_norm
+from .trainer import TrainState, make_train_step, init_train_state
+from .checkpoint import save_checkpoint, restore_checkpoint, latest_step
+
+__all__ = ["AdamWConfig", "AdamWState", "adamw_init", "adamw_update",
+           "global_norm", "TrainState", "make_train_step", "init_train_state",
+           "save_checkpoint", "restore_checkpoint", "latest_step"]

@@ -1,0 +1,106 @@
+"""Checkpoint/restore for fault tolerance (no external deps).
+
+Format: one directory per step containing
+  * ``manifest.json`` — tree structure, shapes, dtypes, step
+  * ``arrays.npz``    — flattened leaves (gathered to host)
+
+Restore is mesh-agnostic: arrays are loaded as host numpy and re-placed with
+whatever shardings the caller supplies (elastic relaunch on a different chip
+count reshards transparently). Writes are atomic (tmp dir + rename) so a
+failure mid-write never corrupts the latest checkpoint; ``latest_step`` scans
+for the newest complete manifest.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(k) for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def _to_savable(a: np.ndarray):
+    """npz cannot store ml_dtypes (bfloat16 etc.) — view them as uint16/8."""
+    if a.dtype.kind not in "fiub":
+        width = a.dtype.itemsize
+        view = {2: np.uint16, 1: np.uint8, 4: np.uint32}[width]
+        return a.view(view), str(a.dtype)
+    return a, str(a.dtype)
+
+
+def save_checkpoint(directory: str, step: int, tree: Any) -> str:
+    paths, leaves, _ = _flatten_with_paths(tree)
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        host = [np.asarray(jax.device_get(l)) for l in leaves]
+        savable = [_to_savable(a) for a in host]
+        arrays = {f"a{i}": a for i, (a, _) in enumerate(savable)}
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {"step": step,
+                    "paths": paths,
+                    "dtypes": [d for _, d in savable]}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except Exception:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    best = None
+    for name in os.listdir(directory):
+        if name.startswith("step_"):
+            manifest = os.path.join(directory, name, "manifest.json")
+            if os.path.exists(manifest):
+                s = int(name.split("_")[1])
+                best = s if best is None else max(best, s)
+    return best
+
+
+def restore_checkpoint(directory: str, step: int, like: Any,
+                       shardings: Optional[Any] = None) -> Any:
+    """Restore into the structure of ``like``; optionally re-place leaves
+    with ``shardings`` (same tree structure) for elastic relaunch."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves = [data[f"a{i}"] for i in range(len(manifest["paths"]))]
+    flat_like, treedef = jax.tree_util.tree_flatten(like)
+    if len(flat_like) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(leaves)} leaves, expected {len(flat_like)}")
+    out = []
+    flat_shard = (jax.tree_util.tree_leaves(shardings)
+                  if shardings is not None else [None] * len(leaves))
+    for arr, saved_dt, ref, shd in zip(leaves, manifest["dtypes"],
+                                       flat_like, flat_shard):
+        a = np.asarray(arr)
+        if str(a.dtype) != saved_dt:             # undo the uint view
+            import ml_dtypes
+            a = a.view(np.dtype(getattr(ml_dtypes, saved_dt, saved_dt)))
+        if hasattr(ref, "dtype") and str(ref.dtype) != str(a.dtype):
+            a = a.astype(ref.dtype)
+        out.append(jax.device_put(a, shd) if shd is not None
+                   else jax.numpy.asarray(a))
+    return treedef.unflatten(out)

@@ -1,0 +1,88 @@
+"""AdamW with ZeRO-sharded state + global-norm clipping.
+
+Optimizer states inherit the parameters' PartitionSpecs (ZeRO: states live
+wherever the param shard lives — with zero3 enabled that is sharded over
+(pod, data) x model, so no device ever holds an unsharded state tensor).
+``state_dtype`` lets the giant configs (DeepSeek-V3) run bf16 moments: with
+2(param)+2+2(bf16 m,v) bytes/param, 671B params fit the 512-chip multi-pod
+budget; fp32 moments are the default everywhere else.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: Any = jnp.float32
+    warmup: int = 100
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    m: Any
+    v: Any
+
+
+def adamw_init(params, cfg: AdamWConfig = AdamWConfig()) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def _schedule(cfg: AdamWConfig, step) -> jnp.ndarray:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup, 1))
+    return cfg.lr * warm
+
+
+def adamw_update(grads, state: AdamWState, params,
+                 cfg: AdamWConfig = AdamWConfig()
+                 ) -> Tuple[Any, AdamWState, jnp.ndarray]:
+    """Returns (new_params, new_state, pre-clip grad norm)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    step = state.step + 1
+    lr = _schedule(cfg, state.step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+        mhat = m32 / b1c
+        vhat = v32 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:          # decay matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, m32.astype(cfg.state_dtype), v32.astype(cfg.state_dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(g, m, v, p) for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), gnorm

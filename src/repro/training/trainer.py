@@ -1,0 +1,52 @@
+"""Training loop substrate: jitted train_step, checkpointing, fault tolerance.
+
+Fault-tolerance model (large-scale runnability):
+  * deterministic checkpoint/restore of the full TrainState (params +
+    optimizer moments + step + data cursor) — repro.training.checkpoint;
+  * the data pipeline is stateless given (seed, step) so restart resumes
+    bit-identically without replaying data;
+  * elastic restart: the checkpoint stores logical arrays; on restore they
+    are resharded to whatever mesh the relaunch built (chips can come and
+    go between runs — pjit resharding handles layout);
+  * straggler/overload mitigation at the serving layer reuses MFS's own
+    feasibility pruning (Algorithm 1), see repro.serving.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.lm import Model
+from .optim import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+__all__ = ["TrainState", "make_train_step", "init_train_state"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+    step: jnp.ndarray
+
+
+def init_train_state(model: Model, key, opt_cfg: AdamWConfig = AdamWConfig()
+                     ) -> TrainState:
+    params = model.init(key)
+    return TrainState(params=params, opt=adamw_init(params, opt_cfg),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig = AdamWConfig()):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]):
+        loss, grads = jax.value_and_grad(model.loss)(state.params, batch)
+        new_params, new_opt, gnorm = adamw_update(
+            grads, state.opt, state.params, opt_cfg)
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm}
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

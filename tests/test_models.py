@@ -1,0 +1,176 @@
+"""Per-architecture smoke tests (reduced configs, CPU) + serving-path
+consistency: suffix prefill == full prefill, prefill+decode == longer
+prefill, MoE decode gather == ragged path."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SMOKES
+from repro.models.lm import build_model
+
+KEY = jax.random.PRNGKey(0)
+RNG = np.random.default_rng(0)
+ALL_ARCHS = sorted(SMOKES)
+
+
+def _batch(cfg, B=2, T=16, rng=RNG):
+    toks = rng.integers(0, cfg.vocab, size=(B, T + 1))
+    out = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+           "labels": jnp.asarray(toks[:, 1:], jnp.int32)}
+    if cfg.family == "vlm":
+        out = {"inputs_embeds": jnp.asarray(
+                   rng.normal(size=(B, T, cfg.d_model)), jnp.bfloat16),
+               "labels": out["labels"]}
+    if cfg.enc_layers:
+        out["src_embeds"] = jnp.asarray(
+            rng.normal(size=(B, 8, cfg.d_model)), jnp.bfloat16)
+    if cfg.mtp:
+        out["labels2"] = out["labels"]
+    return out
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_train_step(arch):
+    """One forward/train step on CPU: correct shapes, finite, grads flow."""
+    cfg = SMOKES[arch]
+    model = build_model(cfg)
+    params = model.init(KEY)
+    batch = _batch(cfg)
+    loss, grads = jax.value_and_grad(model.loss)(params, batch)
+    assert jnp.isfinite(loss), arch
+    gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32))))
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0, arch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_prefill_decode_shapes(arch):
+    cfg = SMOKES[arch]
+    model = build_model(cfg)
+    params = model.init(KEY)
+    b = _batch(cfg, B=2, T=12)
+    b.pop("labels"); b.pop("labels2", None)
+    logits, cache = model.prefill(params, b)
+    assert logits.shape == (2, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    logits2, cache2 = model.decode_step(
+        params, cache, jnp.zeros((2, 1), jnp.int32), 12)
+    assert logits2.shape == (2, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits2.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_full_config_instantiates_abstractly(arch):
+    """The FULL config builds an abstract param tree (no allocation) with
+    the advertised parameter count."""
+    cfg = ARCHS[arch]
+    model = build_model(cfg)
+    abstract = jax.eval_shape(model.init, KEY)
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(abstract))
+    expect = cfg.params()
+    assert abs(n - expect) / expect < 0.35, (n, expect)
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "qwen1.5-32b",
+                                  "deepseek-v3-671b", "mamba2-1.3b",
+                                  "recurrentgemma-9b", "seamless-m4t-medium"])
+def test_suffix_prefill_matches_full(arch):
+    """prefill(prefix) -> prefill(suffix, caches, pos) == prefill(full):
+    the data plane of Stage-1 KV reuse is exact."""
+    cfg = SMOKES[arch]
+    model = build_model(cfg)
+    params = model.init(KEY)
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(1, 24)), jnp.int32)
+    extra = {}
+    if cfg.enc_layers:
+        extra["src_embeds"] = jnp.asarray(
+            rng.normal(size=(1, 8, cfg.d_model)), jnp.bfloat16)
+    P = 16
+    full, _ = model.prefill(params, {"tokens": toks, **extra})
+    _, pre = model.prefill(params, {"tokens": toks[:, :P], **extra})
+    sfx, _ = model.prefill(params, {"tokens": toks[:, P:], **extra},
+                           caches=pre, pos=P)
+    scale = float(jnp.max(jnp.abs(full.astype(jnp.float32)))) + 1e-9
+    err = float(jnp.max(jnp.abs((full - sfx).astype(jnp.float32))))
+    assert err / scale < 2e-2, (arch, err, scale)
+
+
+@pytest.mark.parametrize("arch", ["smollm-360m", "mamba2-1.3b",
+                                  "recurrentgemma-9b", "deepseek-v3-671b"])
+def test_decode_consistent_with_prefill(arch):
+    """prefill(t[:n]) + decode(t[n]) logits == prefill(t[:n+1]) logits."""
+    cfg = SMOKES[arch]
+    model = build_model(cfg)
+    params = model.init(KEY)
+    rng = np.random.default_rng(2)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(1, 17)), jnp.int32)
+    n = 16
+    # decode path needs cache capacity > n: prefill gives exactly n slots for
+    # attention archs, so append via suffix-prefill instead for them; the
+    # recurrent/ssm archs decode against O(1) state directly.
+    want, _ = model.prefill(params, {"tokens": toks})
+    _, cache = model.prefill(params, {"tokens": toks[:, :n]})
+    if cfg.family in ("ssm",):
+        got, _ = model.decode_step(params, cache, toks[:, n:], n)
+    else:
+        got, _ = model.prefill(params, {"tokens": toks[:, n:]},
+                               caches=cache, pos=n)
+    scale = float(jnp.max(jnp.abs(want.astype(jnp.float32)))) + 1e-9
+    err = float(jnp.max(jnp.abs((want - got).astype(jnp.float32))))
+    assert err / scale < 2e-2, (arch, err)
+
+
+def test_moe_gather_matches_ragged():
+    from repro.models.blocks import _moe_local, _moe_token_gather, moe_init
+    from repro.models.sharding import ShardCtx
+    cfg = SMOKES["deepseek-moe-16b"]
+    p = moe_init(jax.random.PRNGKey(1), cfg, ShardCtx())
+    x = jnp.asarray(RNG.normal(size=(3, 2, cfg.d_model)), jnp.float32)
+    a = _moe_local(p, x, cfg).astype(jnp.float32)
+    b = _moe_token_gather(p, x, cfg).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_int8_kv_decode_close_to_bf16():
+    """int8 KV decode (the qwen1.5 decode_32k policy) stays close to bf16."""
+    cfg = SMOKES["qwen1.5-32b"]
+    model = build_model(cfg)
+    params = model.init(KEY)
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(1, 8)), jnp.int32)
+    _, cache_bf16 = model.prefill(params, {"tokens": toks})
+
+    def convert(c, to_int8):
+        def f(path, leaf):
+            name = str(getattr(path[-1], "key", ""))
+            if name in ("k", "v") and to_int8:
+                from repro.models.blocks import _kv_store
+                return _kv_store(leaf, jnp.int8)
+            return leaf
+        return jax.tree_util.tree_map_with_path(f, c)
+
+    # pad capacity by re-building: decode writes at pos=8 so capacity 8 is
+    # full; grow caches to 16 slots
+    def grow(c):
+        def f(path, leaf):
+            name = str(getattr(path[-1], "key", ""))
+            if name in ("k", "v"):
+                pad = [(0, 0)] * leaf.ndim
+                pad[2] = (0, 8)
+                return jnp.pad(leaf, pad)
+            return leaf
+        return jax.tree_util.tree_map_with_path(f, c)
+
+    cache_bf16 = grow(cache_bf16)
+    cache_int8 = convert(cache_bf16, True)
+    tok = toks[:, -1:]
+    lg_a, _ = model.decode_step(params, cache_bf16, tok, 8)
+    lg_b, _ = model.decode_step(params, cache_int8, tok, 8)
+    a = jax.nn.softmax(lg_a.astype(jnp.float32)[0, -1])
+    b = jax.nn.softmax(lg_b.astype(jnp.float32)[0, -1])
+    assert float(jnp.sum(jnp.abs(a - b))) < 0.25   # total-variation distance
+    assert int(jnp.argmax(a)) == int(jnp.argmax(b))

@@ -1,0 +1,126 @@
+"""Fluid network model properties: strict priority, max-min fairness,
+rate caps, conservation; event queue determinism."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Stage, new_flow_id
+from repro.core.msflow import Flow
+from repro.netsim.events import EventQueue
+from repro.netsim.fluid import FluidNet
+from repro.netsim.topology import FatTree, SingleToR
+from repro.netsim.toy import OneLink
+
+
+def _flow(src=0, dst=1, size=100.0, key=(0,), cap=None, stage=Stage.P2D):
+    f = Flow(fid=new_flow_id(), rid=0, unit=0, stage=stage, size=size,
+             src=src, dst=dst, target_layer=0, n_layers=4, deadline=None)
+    f.priority_key = key
+    f.rate_cap = cap
+    return f
+
+
+def test_strict_priority_preempts():
+    net = FluidNet(OneLink(1.0))
+    hi = _flow(key=(0,))
+    lo = _flow(key=(1,))
+    net.add(hi); net.add(lo)
+    net.reallocate()
+    assert hi.rate == pytest.approx(1.0)
+    assert lo.rate == pytest.approx(0.0)
+
+
+def test_maxmin_within_group():
+    net = FluidNet(OneLink(1.0))
+    flows = [_flow(key=(0,)) for _ in range(4)]
+    for f in flows:
+        net.add(f)
+    net.reallocate()
+    for f in flows:
+        assert f.rate == pytest.approx(0.25)
+
+
+def test_rate_cap_respected_and_leftover_shared():
+    net = FluidNet(OneLink(1.0))
+    capped = _flow(key=(0,), cap=0.2)
+    other = _flow(key=(0,))
+    net.add(capped); net.add(other)
+    net.reallocate()
+    assert capped.rate == pytest.approx(0.2)
+    assert other.rate == pytest.approx(0.8)
+
+
+def test_completion_times_exact():
+    net = FluidNet(OneLink(2.0))
+    f = _flow(size=10.0, key=(0,))
+    net.add(f)
+    net.reallocate()
+    nxt = net.next_completion()
+    assert nxt[0] == pytest.approx(5.0)
+    done = net.advance(5.0)
+    assert done == [f]
+    assert f.finished == pytest.approx(5.0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.floats(0.1, 50.0)),
+                min_size=1, max_size=12))
+def test_conservation_no_link_oversubscribed(flows_spec):
+    """Property: allocations never exceed any link capacity and every flow
+    with a clear path makes progress."""
+    topo = SingleToR(4, nic_bw=1.0, gpus_per_server=2, scaleup_bw=2.0)
+    net = FluidNet(topo)
+    flows = []
+    for prio, size in flows_spec:
+        f = _flow(src=np.random.randint(0, 4), dst=np.random.randint(0, 4),
+                  size=size, key=(prio,))
+        flows.append(f)
+        net.add(f)
+    net.reallocate()
+    usage = {}
+    for f in flows:
+        for lid in net.routes[f.fid]:
+            usage[lid] = usage.get(lid, 0.0) + f.rate
+    for lid, u in usage.items():
+        assert u <= topo.capacity[lid] + 1e-6
+    # top-priority group always gets positive aggregate rate
+    top = min(tuple(f.priority_key) for f in flows)
+    assert sum(f.rate for f in flows if tuple(f.priority_key) == top) > 0
+
+
+def test_fat_tree_ecmp_routes_consistent():
+    topo = FatTree(racks=2, hosts_per_rack=4, nic_bw=1.0,
+                   gpus_per_server=2, scaleup_bw=4.0)
+    r1 = topo.route(0, 7, fid=42)
+    r2 = topo.route(0, 7, fid=42)
+    assert r1 == r2                              # per-flow deterministic
+    assert len(r1) == 4                          # host-leaf-spine-leaf-host
+    same_rack = topo.route(0, 3, fid=1)
+    assert len(same_rack) == 2
+    same_server = topo.route(0, 1, fid=1)
+    assert len(same_server) == 2                 # scale-up fabric
+
+
+def test_victim_unit_ingress_contention():
+    """Many senders -> one victim endpoint: its downlink is the bottleneck
+    (§2.2 inter-request contention)."""
+    topo = SingleToR(4, nic_bw=1.0, gpus_per_server=1)
+    net = FluidNet(topo)
+    flows = [_flow(src=s, dst=0, size=10.0, key=(0,)) for s in (1, 2, 3)]
+    for f in flows:
+        net.add(f)
+    net.reallocate()
+    for f in flows:
+        assert f.rate == pytest.approx(1.0 / 3.0)
+
+
+def test_event_queue_fifo_and_epoch():
+    q = EventQueue()
+    q.push(1.0, "a", None)
+    q.push(1.0, "b", None)
+    q.push(0.5, "c", None)
+    assert q.pop()[1] == "c"
+    assert q.pop()[1] == "a"                     # FIFO tie-break
+    assert q.pop()[1] == "b"
+    with pytest.raises(ValueError):
+        q.push(0.1, "late", None)                # scheduling into the past

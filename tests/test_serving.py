@@ -1,0 +1,207 @@
+"""Serving substrate tests: paged KV store + prefix index, continuous
+batching decode, and the end-to-end disaggregated orchestrator."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SMOKES
+from repro.core import make_policy
+from repro.models.lm import build_model
+from repro.serving import (DecodeBatch, DisaggConfig, DisaggServer,
+                           PagedStore, PrefixIndex, ServeRequest,
+                           ServingEngine, cache_has_state)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = SMOKES["smollm-360m"]
+    model = build_model(cfg)
+    return cfg, model, model.init(KEY)
+
+
+# ------------------------------------------------------------------ paged KV
+def test_paged_roundtrip(smollm):
+    cfg, model, params = smollm
+    rng = np.random.default_rng(0)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(1, 24)), jnp.int32)
+    _, cache = model.prefill(params, {"tokens": toks})
+    store = PagedStore(page_size=8, n_pages=32)
+    pages = store.put(cache, 24)
+    assert len(pages) == 3
+    got = store.gather(pages, 24)
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_paged_refcounting(smollm):
+    cfg, model, params = smollm
+    rng = np.random.default_rng(1)
+    store = PagedStore(page_size=8, n_pages=8)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, size=(1, 16)), jnp.int32)
+    _, cache = model.prefill(params, {"tokens": toks})
+    pages = store.put(cache, 16)
+    free0 = store.alloc.n_free
+    store.retain(pages)
+    store.release(pages)
+    assert store.alloc.n_free == free0         # still held by first ref
+    store.release(pages)
+    assert store.alloc.n_free == free0 + len(pages)
+
+
+def test_prefix_index_page_aligned_match(smollm):
+    cfg, model, params = smollm
+    rng = np.random.default_rng(2)
+    store = PagedStore(page_size=8, n_pages=64)
+    index = PrefixIndex(store)
+    base = rng.integers(0, cfg.vocab, size=(24,))
+    _, cache = model.prefill(
+        params, {"tokens": jnp.asarray(base[None], jnp.int32)})
+    pages = store.put(cache, 24)
+    index.insert_paged(base, pages, owner_unit=0, per_token_bytes=100.0)
+    # same 24-token prefix, new suffix -> matches the full 24 (3 pages)
+    query = np.concatenate([base, rng.integers(0, cfg.vocab, size=(10,))])
+    e = index.match(query)
+    assert e is not None and e.n_tokens == 24
+    # diverges inside page 2 -> only the first 8-token page matches
+    query2 = base.copy()
+    query2[9] = (query2[9] + 1) % cfg.vocab
+    e2 = index.match(query2)
+    assert e2 is not None and e2.n_tokens == 8
+    # completely different -> no match
+    assert index.match(rng.integers(0, cfg.vocab, size=(24,))) is None
+
+
+def test_snapshot_regime_for_ssm():
+    cfg = SMOKES["mamba2-1.3b"]
+    model = build_model(cfg)
+    params = model.init(KEY)
+    rng = np.random.default_rng(3)
+    toks = rng.integers(0, cfg.vocab, size=(20,))
+    _, cache = model.prefill(
+        params, {"tokens": jnp.asarray(toks[None], jnp.int32)})
+    assert cache_has_state(cache)
+    store = PagedStore(page_size=8, n_pages=8)
+    index = PrefixIndex(store)
+    index.insert_snapshot(toks, cache, owner_unit=1)
+    q = np.concatenate([toks, rng.integers(0, cfg.vocab, size=(5,))])
+    e = index.match(q)
+    assert e is not None and e.n_tokens == 20 and e.owner_unit == 1
+    got = index.fetch(e)
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------- continuous batching
+@pytest.mark.parametrize("arch", ["smollm-360m", "recurrentgemma-9b",
+                                  "deepseek-moe-16b"])
+def test_decode_batch_matches_single_sequence(arch):
+    """Slotted batched decode produces the same greedy tokens as prefilling
+    the whole continuation (teacher-forced check)."""
+    cfg = SMOKES[arch]
+    model = build_model(cfg)
+    params = model.init(KEY)
+    eng = ServingEngine(model, params)
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab, size=(n,)) for n in (12, 19)]
+    db = DecodeBatch(model, params, capacity=64, max_slots=4)
+    first, caches = {}, {}
+    for rid, p in enumerate(prompts):
+        first[rid], caches[rid], _ = eng.prefill(p)
+        db.add(rid, caches[rid], len(p), first[rid], max_new=3)
+    batched = {rid: [first[rid]] for rid in first}
+    while db.n_active:
+        for rid, t in db.step().items():
+            batched[rid].append(t)
+    # reference: greedy continuation via teacher-forced full prefill
+    for rid, p in enumerate(prompts):
+        seq = list(p)
+        want = []
+        for _ in range(3):
+            lg, _ = model.prefill(
+                params, {"tokens": jnp.asarray(np.asarray(seq)[None],
+                                               jnp.int32)})
+            t = int(jnp.argmax(lg[0, -1]))
+            want.append(t)
+            seq.append(t)
+        assert batched[rid][:3] == want, (arch, rid, batched[rid], want)
+
+
+def test_decode_batch_slot_recycling(smollm):
+    cfg, model, params = smollm
+    eng = ServingEngine(model, params)
+    db = DecodeBatch(model, params, capacity=32, max_slots=2)
+    rng = np.random.default_rng(5)
+    for rid in range(4):                       # 4 requests through 2 slots
+        p = rng.integers(0, cfg.vocab, size=(8 + rid,))
+        t, c, _ = eng.prefill(p)
+        db.add(rid, c, len(p), t, max_new=2)
+        while db.n_active == db.max_slots:
+            db.step()
+    while db.n_active:
+        db.step()
+    assert len(db._free) == db.max_slots
+
+
+# ------------------------------------------------------------- orchestrator
+def test_disagg_server_end_to_end(smollm):
+    cfg, model, params = smollm
+    rng = np.random.default_rng(6)
+    shared = rng.integers(0, cfg.vocab, size=(32,))
+    reqs = []
+    for i in range(6):
+        if i % 2 == 0:
+            toks = np.concatenate(
+                [shared, rng.integers(0, cfg.vocab, size=(10,))])
+        else:
+            toks = rng.integers(0, cfg.vocab, size=(40,))
+        reqs.append(ServeRequest(rid=i, arrival=i * 1e-4, tokens=toks,
+                                 max_new=3))
+    srv = DisaggServer(model, params,
+                       cfg=DisaggConfig(n_prefill_units=2, n_pages=128))
+    res = srv.serve(reqs)
+    assert len(res) == 6
+    assert all(r.ttft > 0 for r in res)
+    assert all(len(r.tokens) >= 1 for r in res)
+    # prefix reuse kicked in for the later shared-prefix requests
+    assert any(r.reused_tokens >= 32 for r in res)
+    # determinism of the data plane: same tokens => same first token for the
+    # two requests that share the full input... (rid0 vs rid2 share only the
+    # prefix, so just check reuse didn't corrupt outputs: finite + in-vocab)
+    assert all(0 <= t < cfg.vocab for r in res for t in r.tokens)
+
+
+def test_disagg_reuse_is_exact(smollm):
+    """A request served via Stage-1 reuse produces the same first token as
+    the identical request served cold."""
+    cfg, model, params = smollm
+    rng = np.random.default_rng(7)
+    shared = rng.integers(0, cfg.vocab, size=(32,))
+    sfx = rng.integers(0, cfg.vocab, size=(8,))
+    toks = np.concatenate([shared, sfx])
+    cold = DisaggServer(model, params,
+                        cfg=DisaggConfig(n_prefill_units=1, n_pages=64))
+    r_cold = cold.serve([ServeRequest(0, 0.0, toks, max_new=1)])[0]
+    warm = DisaggServer(model, params,
+                        cfg=DisaggConfig(n_prefill_units=1, n_pages=64))
+    warm.serve([ServeRequest(0, 0.0, np.concatenate(
+        [shared, rng.integers(0, cfg.vocab, size=(6,))]), max_new=1)])
+    r_warm = warm.serve([ServeRequest(1, 1.0, toks, max_new=1)])[0]
+    assert r_warm.reused_tokens >= 32
+    assert r_warm.first_token == r_cold.first_token
+
+
+def test_disagg_policies_all_run(smollm):
+    cfg, model, params = smollm
+    rng = np.random.default_rng(8)
+    reqs = [ServeRequest(i, i * 1e-4,
+                         rng.integers(0, cfg.vocab, size=(24,)), max_new=1)
+            for i in range(4)]
+    for pol in ("mfs", "fs", "sjf", "edf", "karuna"):
+        srv = DisaggServer(model, params, policy=make_policy(pol),
+                           cfg=DisaggConfig(n_prefill_units=2))
+        res = srv.serve(reqs)
+        assert len(res) == 4

@@ -1,0 +1,23 @@
+"""Sharded-vs-single-device numerical equivalence.
+
+The check needs a fresh jax process with 8 virtual CPU devices (XLA_FLAGS
+must be set before jax initialises), so it runs as a subprocess.
+"""
+import os
+import subprocess
+import sys
+
+HERE = os.path.dirname(__file__)
+SRC = os.path.join(HERE, "..", "src")
+
+
+def test_sharded_equivalence_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(HERE, "sharded_check.py")],
+        capture_output=True, text=True, env=env, timeout=900)
+    sys.stdout.write(proc.stdout)
+    sys.stderr.write(proc.stderr[-2000:])
+    assert proc.returncode == 0, "sharded equivalence check failed"

@@ -1,0 +1,96 @@
+"""Cluster-simulator integration: every policy runs every workload family,
+MFS dominates stage-agnostic baselines under engineered contention, and the
+metrics match the paper's definitions (SLO = 3x low-load TTFT)."""
+import numpy as np
+import pytest
+
+from repro.core import make_policy
+from repro.simcluster.papermodels import PAPER_MODELS
+from repro.simcluster.sim import ClusterSim, ClusterSpec, ParallelismSpec
+from repro.simcluster.trace import WORKLOADS, generate_trace
+
+
+def _spec(model="mixtral-8x7b", mode="ep", **kw):
+    par = (ParallelismSpec(mode="ep", ep=8) if mode == "ep"
+           else ParallelismSpec(mode="sp", tp=2, sp=2))
+    return ClusterSpec(model=PAPER_MODELS[model], par=par, **kw)
+
+
+def _run(policy, spec, workload="qwen-agent", n=48, rps=8.0, seed=0, **kw):
+    trace = generate_trace(WORKLOADS[workload], n_requests=n, rps=rps,
+                           seed=seed, warmup=8)
+    sim = ClusterSim(spec, make_policy(policy), seed=seed, **kw)
+    return sim.run(trace)
+
+
+@pytest.mark.parametrize("policy", ["fs", "sjf", "edf", "karuna", "mfs",
+                                    "llf-oracle"])
+def test_all_policies_complete(policy):
+    m = _run(policy, _spec(), n=32)
+    s = m.summary()
+    assert s["n"] == 32
+    assert 0.0 <= s["slo_attainment"] <= 1.0
+    assert s["ttft_mean"] > 0
+
+
+@pytest.mark.parametrize("workload", sorted(WORKLOADS))
+def test_all_workloads_run(workload):
+    m = _run("mfs", _spec(), workload=workload, n=24, rps=4.0)
+    assert m.summary()["n"] == 24
+
+
+def test_sp_mode_runs():
+    m = _run("mfs", _spec(model="llama3-8b", mode="sp"),
+             workload="mooncake-agent", n=16, rps=2.0)
+    assert m.summary()["n"] == 16
+
+
+def test_contention_free_is_lower_bound():
+    """w/o contention TTFT <= w/ contention TTFT per request (Fig 5)."""
+    spec = _spec()
+    m_free = _run("fs", spec, n=32, rps=12.0, contention_free=True)
+    m_cont = _run("fs", spec, n=32, rps=12.0)
+    assert m_free.summary()["ttft_mean"] <= m_cont.summary()["ttft_mean"] + 1e-9
+
+
+def test_mfs_beats_stage_agnostic_under_contention():
+    """Engineered hot-prefix overload: MFS's SLO attainment must match or
+    beat every stage-agnostic baseline, and its CCT slowdown must be lowest
+    (the paper's central claim, Figs 9-13)."""
+    spec = _spec(n_units=2)
+    att, cct = {}, {}
+    for pol in ("fs", "sjf", "edf", "karuna", "mfs"):
+        m = _run(pol, spec, workload="qwen-agent", n=64, rps=16.0)
+        s = m.summary()
+        att[pol] = s["slo_attainment"]
+        cct[pol] = s["cct_slowdown"]
+    best_baseline = max(att[p] for p in ("fs", "sjf", "edf", "karuna"))
+    assert att["mfs"] >= best_baseline - 1e-9, (att, cct)
+    assert cct["mfs"] <= min(cct[p] for p in ("fs", "sjf", "edf")) + 1e-9
+
+
+def test_mfs_close_to_llf_oracle():
+    """MFS approximates LLF: within 10% attainment of the clairvoyant
+    oracle on the default workload."""
+    spec = _spec(n_units=2)
+    a_mfs = _run("mfs", spec, n=64, rps=12.0).summary()["slo_attainment"]
+    a_llf = _run("llf-oracle", spec, n=64,
+                 rps=12.0).summary()["slo_attainment"]
+    assert a_mfs >= a_llf - 0.10
+
+
+def test_deterministic_given_seed():
+    a = _run("mfs", _spec(), n=24, seed=3).summary()
+    b = _run("mfs", _spec(), n=24, seed=3).summary()
+    assert a == b
+
+
+def test_slo_definition_scales_with_budget():
+    """slo_scale=3 (paper default) attains at least as much as slo_scale=1."""
+    tight = ClusterSpec(model=PAPER_MODELS["mixtral-8x7b"],
+                        par=ParallelismSpec(mode="ep", ep=8), slo_scale=1.0)
+    loose = ClusterSpec(model=PAPER_MODELS["mixtral-8x7b"],
+                        par=ParallelismSpec(mode="ep", ep=8), slo_scale=3.0)
+    a_t = _run("mfs", tight, n=32, rps=10.0).summary()["slo_attainment"]
+    a_l = _run("mfs", loose, n=32, rps=10.0).summary()["slo_attainment"]
+    assert a_l >= a_t

@@ -1,0 +1,106 @@
+"""Training substrate: loss goes down, checkpoint/restore resumes
+bit-identically (fault-tolerance contract), optimizer math."""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SMOKES
+from repro.launch.train import run as train_run, synthetic_batch
+from repro.models.lm import build_model
+from repro.training.checkpoint import (latest_step, restore_checkpoint,
+                                       save_checkpoint)
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+from repro.training.trainer import init_train_state, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_adamw_decreases_quadratic():
+    cfg = AdamWConfig(lr=0.1, warmup=1, weight_decay=0.0, clip_norm=1e9)
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw_init(params, cfg)
+    f = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(f)(params)
+        params, state, _ = adamw_update(g, state, params, cfg)
+    assert float(f(params)) < 1e-2
+
+
+def test_adamw_grad_clipping_reported():
+    cfg = AdamWConfig(clip_norm=1.0)
+    params = {"w": jnp.ones((4,))}
+    state = adamw_init(params, cfg)
+    grads = {"w": jnp.full((4,), 100.0)}
+    _, _, gnorm = adamw_update(grads, state, params, cfg)
+    assert float(gnorm) == pytest.approx(200.0)
+
+
+def test_train_loss_decreases():
+    """~60 steps on a tiny fixed dataset: loss must drop measurably."""
+    cfg = SMOKES["smollm-360m"]
+    model = build_model(cfg)
+    opt = AdamWConfig(lr=1e-3, warmup=10)
+    state = init_train_state(model, KEY, opt)
+    step_fn = jax.jit(make_train_step(model, opt), donate_argnums=(0,))
+    batch = synthetic_batch(cfg, batch=4, seq=32, seed=0, step=0)
+    first = None
+    for i in range(60):
+        state, metrics = step_fn(state, batch)   # overfit one batch
+        if first is None:
+            first = float(metrics["loss"])
+    last = float(metrics["loss"])
+    assert last < first - 1.0, (first, last)
+
+
+def test_checkpoint_roundtrip_and_resume(tmp_path):
+    cfg = SMOKES["smollm-360m"]
+    model = build_model(cfg)
+    opt = AdamWConfig(lr=1e-3)
+    step_fn = jax.jit(make_train_step(model, opt))
+    state = init_train_state(model, KEY, opt)
+    # run 4 steps, checkpoint at 2
+    states = [state]
+    for step in range(4):
+        batch = synthetic_batch(cfg, 2, 16, seed=7, step=step)
+        state, _ = step_fn(state, batch)
+        states.append(state)
+        if step == 1:
+            save_checkpoint(str(tmp_path), 2, state)
+    assert latest_step(str(tmp_path)) == 2
+    # restore and replay steps 2..3 -> bit-identical final params
+    abstract = jax.eval_shape(lambda k: init_train_state(model, k, opt), KEY)
+    resumed = restore_checkpoint(str(tmp_path), 2, abstract)
+    for step in range(2, 4):
+        batch = synthetic_batch(cfg, 2, 16, seed=7, step=step)
+        resumed, _ = step_fn(resumed, batch)
+    for a, b in zip(jax.tree.leaves(states[-1].params),
+                    jax.tree.leaves(resumed.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_atomicity(tmp_path):
+    """A bogus temp dir never shadows the newest complete checkpoint."""
+    cfg = SMOKES["smollm-360m"]
+    model = build_model(cfg)
+    state = init_train_state(model, KEY)
+    save_checkpoint(str(tmp_path), 5, state)
+    os.makedirs(tmp_path / "step_00000009")     # incomplete: no manifest
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_launcher_end_to_end(tmp_path):
+    """launch.train drives a real (tiny) run with checkpointing."""
+    _, losses = train_run("smollm-360m", steps=6, batch=2, seq=16,
+                          ckpt_dir=str(tmp_path), ckpt_every=3,
+                          log_every=0)
+    assert len(losses) == 6
+    assert np.isfinite(losses).all()
+    assert latest_step(str(tmp_path)) == 6
+    # elastic restart: resume from ckpt and continue
+    _, more = train_run("smollm-360m", steps=8, batch=2, seq=16,
+                        ckpt_dir=str(tmp_path), resume=True, log_every=0)
+    assert len(more) == 2                        # 6 -> 8
