@@ -1,9 +1,17 @@
 """Fig 6 / Fig 7 / Table 1-2 — the didactic single-link scenarios, measured
 (not asserted): layer-unblock times per policy and the inter-request
-deadline/earliness outcome."""
+deadline/earliness outcome — plus the FluidNet water-filling microbench
+(per-call reallocate latency across priority-group-size regimes)."""
 from __future__ import annotations
 
+import time
+
+import numpy as np
+
 from repro.core import MFSScheduler, Stage, make_policy
+from repro.core.msflow import Flow, new_flow_id
+from repro.netsim.fluid import FluidNet
+from repro.netsim.topology import FatTree
 from repro.netsim.toy import make_flow, run_toy
 
 from .common import emit
@@ -23,6 +31,34 @@ def _fig(rows, tag, coll_size, p2d_size):
 
 
 _TABLE1 = {"A": (2.0, 9.0, 18.0), "B": (4.0, 6.0, 12.0), "C": (3.0, 0.0, 7.0)}
+
+
+def _bench_waterfill(rows, n_flows: int = 512, reps: int = 20):
+    """Reallocate latency vs. priority-group width. ``1key`` is the
+    FairShare / shared-RMLQ-band regime (one wide group, served by the
+    vectorized route-incidence fill); ``perflow`` is the SJF regime (one
+    group per flow, served by the scalar walk)."""
+    for label, nkeys in (("1key", 1), ("8key", 8), ("perflow", n_flows)):
+        rng = np.random.default_rng(0)
+        topo = FatTree(racks=8, hosts_per_rack=8, nic_bw=1.0,
+                       gpus_per_server=4, scaleup_bw=4.0)
+        net = FluidNet(topo)
+        for i in range(n_flows):
+            s, d = rng.integers(0, topo.n_nodes, size=2)
+            f = Flow(new_flow_id(), i, 0, Stage.P2D,
+                     float(rng.uniform(1, 100)), src=int(s), dst=int(d),
+                     target_layer=0, n_layers=8)
+            f.priority_key = (i % nkeys,)
+            if rng.uniform() < 0.2:
+                f.rate_cap = float(rng.uniform(0.05, 0.5))
+            net.add(f)
+        net.reallocate()                      # warm route cache
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            net.reallocate()
+        ms = (time.perf_counter() - t0) / reps * 1e3
+        emit(rows, f"waterfill.{label}.reallocate_ms", f"{ms:.3f}",
+             f"{n_flows} flows")
 
 
 def main(quick: bool = False):
@@ -45,6 +81,7 @@ def main(quick: bool = False):
         emit(rows, f"table2.{pol}.deadline_misses",
              "+".join(missed) if missed else "none",
              f"pos_earliness={earliness:.1f}")
+    _bench_waterfill(rows, reps=5 if quick else 20)
     return rows
 
 

@@ -9,6 +9,8 @@ Public surface:
     inter_request_schedule         — Algorithm 1 (Appendix B)
     MFSScheduler                   — the full arbiter (§4.5)
     FairShare, SJF, EDF, Karuna    — baselines (§6.3), LLFOracle ceiling
+    GroupPlan, StageProfile, StageEmitter — shared stage-emission layer (§3.1)
+    MsFlowRuntime, RuntimeHost     — shared orchestration runtime (§5)
 """
 from .msflow import Stage, Flow, Coflow, FlowState, new_flow_id
 from .urgency import MLUConfig, mlu, mlu_level, geometric_thresholds, rli_level
@@ -26,6 +28,9 @@ from .policies import (
     make_policy,
 )
 from .arbiter import MFSScheduler
+from .stages import (ParallelismSpec, GroupPlan, StageProfile, PrefillItem,
+                     BatchState, StageEmitter)
+from .runtime import MsFlowRuntime, RuntimeHost, RuntimeView
 
 __all__ = [
     "Stage", "Flow", "Coflow", "FlowState", "new_flow_id",
@@ -36,4 +41,7 @@ __all__ = [
     "Policy", "SchedView",
     "FairShare", "SJF", "EDF", "Karuna", "LLFOracle", "make_policy",
     "MFSScheduler",
+    "ParallelismSpec", "GroupPlan", "StageProfile", "PrefillItem",
+    "BatchState", "StageEmitter",
+    "MsFlowRuntime", "RuntimeHost", "RuntimeView",
 ]

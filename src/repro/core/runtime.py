@@ -1,0 +1,493 @@
+"""MsFlow runtime — the shared orchestration core of §5.
+
+One event-loop driver used by BOTH the cluster simulator
+(``repro.simcluster.sim.ClusterSim``) and the real-JAX serving path
+(``repro.serving.disagg.DisaggServer``). Every transfer goes through the
+standardized primitives
+
+    submit(flow-with-metadata)  ->  fid
+    permit(fid, priority)           (the policy's assign() on the RMLQ)
+    completion(fid)                 (fires the dependent continuation)
+
+with the pluggable policy deciding priorities and ``repro.netsim.FluidNet``
+playing the fabric. Computation events and network events share one
+``EventQueue`` (§6.1: "processed within a single event queue").
+
+Per batch and super-layer g a unit: (wait for Stage-1 flows targeting
+groups <= g) -> compute C_g -> emit Stage-3 P2D flows for g (+ Stage-2
+coflow, which must finish before group g+1 computes). Reused prefix tokens
+skip computation but their KV must arrive (Stage 1) before the consuming
+layer group runs — late arrivals stall the GPU, which is precisely the
+contention -> TTFT coupling the paper measures.
+
+Hosts customise the runtime through :class:`RuntimeHost` hooks only:
+routing (KV-aware placement), admission/completion bookkeeping, and — on
+the serving path — launching the *real* JAX prefill when a batch starts.
+The full MFS policy surface (RMLQ promotion, Algorithm 1 RED ordering +
+feasibility pruning, scavenger readmission) runs identically on both
+hosts; there are no degenerate per-host stubs.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .arbiter import MFSScheduler
+from .feasibility import BatchLoad, inter_request_schedule
+from .msflow import Coflow, Flow, FlowState, Stage
+from .policies import Policy
+from .stages import BatchState, PrefillItem, StageEmitter, StageProfile
+
+__all__ = ["RuntimeHost", "MsFlowRuntime", "RuntimeView"]
+
+
+class RuntimeHost:
+    """Hooks a host implements around the shared runtime (all optional but
+    :meth:`route`). The runtime never reaches into host state directly."""
+
+    def route(self, item: PrefillItem) -> int:
+        """Pick the prefill unit for an arriving request (KV-aware). May
+        refine ``item.reuse`` / ``item.owner_unit`` (e.g. from a real
+        prefix index) before the runtime derives the SLO deadline."""
+        raise NotImplementedError
+
+    def on_admitted(self, item: PrefillItem) -> None:
+        """Called once per request after routing + deadline derivation."""
+
+    def on_batch_started(self, bs: BatchState) -> None:
+        """Called when a batch forms — the serving host runs the real JAX
+        prefill here (results are exact; latency comes from the profile)."""
+
+    def on_request_done(self, item: PrefillItem, bs: BatchState) -> None:
+        """Called when a request's TTFT materialises (last P2D arrived)."""
+
+    def on_coflow_done(self, bs: BatchState, co: Coflow, ideal: float) -> None:
+        """Called when a Stage-2 coflow completes (CCT bookkeeping)."""
+
+
+class RuntimeView:
+    """The one concrete SchedView over FluidNet + runtime state."""
+
+    def __init__(self, rt: "MsFlowRuntime"):
+        self.rt = rt
+
+    @property
+    def now(self) -> float:
+        return self.rt.net.now
+
+    def bottleneck(self, flow: Flow) -> Tuple[float, float]:
+        return self.rt.net.bottleneck(flow)
+
+    def mlu_inputs(self, flow: Flow, level: int) -> Tuple[float, float]:
+        # Protected = traffic strictly more urgent than this flow would be at
+        # ``level``: anything at a higher level, plus early-stage flows at the
+        # same level (band precedence, §4.5). Early-stage flows at *lower*
+        # levels would be preempted by the promotion, so they don't raise rho.
+        def protected(other: Flow) -> bool:
+            k = other.priority_key
+            return k[0] < level or (k[0] == level and len(k) >= 2 and k[1] == 0)
+        return self.rt.net.bottleneck_protected(flow, protected)
+
+    def l_curr(self, unit: int) -> int:
+        b = self.rt.active_batch.get(unit)
+        return b.cur_group if b else 0
+
+    def computing(self, rid: int) -> bool:
+        b = self.rt.batch_of_request.get(rid)
+        return bool(b and b.compute_done_at is None)
+
+    def red_rank(self, rid: int) -> int:
+        return self.rt.red_ranks.get(rid, 0)
+
+    def downstream_estimate(self, flow: Flow) -> float:
+        """Time until the data carried by ``flow`` is actually consumed."""
+        b = self.rt.batch_of_request.get(flow.rid)
+        if b is None or b.compute_done_at is not None:
+            return 0.0
+        if flow.stage == Stage.COLLECTIVE:
+            return 0.0                      # blocks the very next step
+        if flow.stage == Stage.KV_REUSE:    # needed when its group starts
+            return sum(b.group_time[b.cur_group:flow.target_layer])
+        rem = len(b.group_time) - b.cur_group
+        return sum(b.group_time[b.cur_group:]) + b.recompute_extra * rem
+
+
+class MsFlowRuntime:
+    """Event-loop driver + batch lifecycle + overload control (Algorithm 1)."""
+
+    def __init__(self, topo, net, evq, policy: Policy, profile: StageProfile,
+                 emitter: StageEmitter, host: RuntimeHost, n_units: int, *,
+                 max_batch_tokens: int = 8192, slo_scale: float = 3.0,
+                 slo_mode: str = "per-request", tick_interval: float = 2e-3,
+                 drop_budget: int = 32, contention_free: bool = False,
+                 trace_stages: bool = False):
+        self.topo = topo
+        self.net = net
+        self.evq = evq
+        self.policy = policy
+        self.profile = profile
+        self.emitter = emitter
+        self.host = host
+        self.n_units = n_units
+        self.max_batch_tokens = max_batch_tokens
+        self.slo_scale = slo_scale
+        self.slo_mode = slo_mode                 # "per-request" | "fixed"
+        self.tick_interval = tick_interval
+        self.drop_budget = drop_budget
+        self.contention_free = contention_free
+        self.view = RuntimeView(self)
+
+        # --- per-unit serving state ---
+        self.queues: List[List[PrefillItem]] = [[] for _ in range(n_units)]
+        self.active_batch: Dict[int, BatchState] = {}
+        self.batch_of_request: Dict[int, BatchState] = {}
+        self.backlog_tokens = [0.0] * n_units
+        self._bid = itertools.count()
+
+        # --- scheduler state ---
+        self.flows: Dict[int, Flow] = {}
+        self.red_ranks: Dict[int, int] = {}
+        self.pruned_rids: Set[int] = set()     # currently demoted
+        self.ever_pruned: Set[int] = set()     # paid a prune at least once
+        self.n_pruned = 0
+        self._epoch = 0
+        self._slo_budget: Optional[float] = None
+        self._tick_armed = False
+        self._G = len(profile.plan)
+        self._t_first_decode = profile.first_decode_time()
+        # optional observability: (rid, stage, group, size, deadline) per
+        # submitted flow + level at submission, consumed by parity tests and
+        # the promotion/pruning reports of examples/serve_disagg.py
+        self.trace_stages = trace_stages
+        self.stage_log: List[Tuple[int, Stage, int, float, Optional[float]]] = []
+        self.submit_level: Dict[int, int] = {}
+
+    # ---------------------------------------------------------- calibration
+    def calibrate_slo(self, items: Sequence[PrefillItem]) -> None:
+        """§6.1: one workload-level SLO threshold = slo_scale x the mean
+        low-load TTFT (``slo_mode="fixed"``). Per-request mode derives each
+        deadline from the request's own ideal at admission time instead."""
+        if self.slo_mode == "fixed" and items:
+            low_load = float(np.mean([self.profile.ideal_ttft(i) for i in items]))
+            self._slo_budget = self.slo_scale * low_load
+        else:
+            self._slo_budget = None
+
+    # ------------------------------------------------------------- plumbing
+    def push_arrival(self, item: PrefillItem) -> None:
+        self.evq.push(item.arrival, "arr", item)
+
+    def _submit(self, flow: Flow) -> None:
+        flow.created = self.net.now
+        self.flows[flow.fid] = flow
+        self.net.add(flow)
+        if flow.rid in self.pruned_rids and flow.stage != Stage.COLLECTIVE:
+            flow.state = FlowState.PRUNED
+        self.policy.on_flow_submitted(flow, self.view)
+        self.submit_level[flow.fid] = flow.level
+        if self.trace_stages:
+            self.stage_log.append((flow.rid, flow.stage, flow.target_layer,
+                                   flow.size, flow.deadline))
+
+    def _resched(self, trigger: Tuple = ("event",)) -> None:
+        active = list(self.net.flows.values())
+        self.policy.assign(active, self.view, trigger)
+        if self.contention_free:
+            for f in active:
+                route = self.net.routes[f.fid]
+                f.rate = min((self.topo.capacity[l] for l in route), default=2e12)
+            self.net._link_rate = {}
+        else:
+            self.net.reallocate()
+        self._epoch += 1
+        nxt = self.net.next_completion()
+        if nxt is not None:
+            self.evq.push(nxt[0], "net", None, epoch=self._epoch)
+
+    # ---------------------------------------------------------- unit driver
+    def _maybe_start_batch(self, u: int) -> None:
+        if u in self.active_batch or not self.queues[u]:
+            return
+        batch: List[PrefillItem] = []
+        tokens = 0
+        while self.queues[u]:
+            it = self.queues[u][0]
+            if batch and tokens + it.n_tokens > self.max_batch_tokens:
+                break
+            batch.append(self.queues[u].pop(0))
+            tokens += it.n_tokens
+        bs = BatchState(
+            bid=next(self._bid), unit=u, items=batch,
+            group_time=[self.profile.group_compute_time(batch, g)
+                        for g in range(self._G)],
+            started=self.net.now)
+        self.active_batch[u] = bs
+        for it in batch:
+            self.batch_of_request[it.rid] = bs
+            bs.p2d_pending[it.rid] = set()
+        self.host.on_batch_started(bs)
+        for f in self.emitter.stage1(bs):
+            self._submit(f)
+        if self.policy.uses_inter_request:
+            self._run_inter_request()
+        self._try_start_group(bs)
+        self._resched(("submit",))
+
+    def _try_start_group(self, bs: BatchState) -> None:
+        g = bs.cur_group
+        blocking = set()
+        for gg in range(g + 1):
+            for fid in bs.s1_pending.get(gg, ()):  # still outstanding
+                fl = self.flows[fid]
+                # scavenged (pruned) Stage-1 flows do NOT block the batch:
+                # their reuse is abandoned and recomputed instead (§5:
+                # "requests can be pruned ... to suppress communication")
+                if fl.state not in (FlowState.DONE, FlowState.PRUNED):
+                    blocking.add(fid)
+        if blocking:
+            bs.phase = "wait_s1"
+            if bs.stall_begin is None:
+                bs.stall_begin = self.net.now
+            return
+        if bs.stall_begin is not None:
+            dt = self.net.now - bs.stall_begin
+            for it in bs.items:
+                it.stalls += dt
+            bs.stall_begin = None
+        bs.phase = "compute"
+        dur = bs.group_time[g] + self._recompute_penalty(bs, g)
+        self.evq.push(self.net.now + dur, "compute", (bs.bid, bs.unit, g))
+
+    def _recompute_penalty(self, bs: BatchState, g: int) -> float:
+        """Compute time to re-derive reused KV that pruning left undelivered.
+
+        Charged once per (request, group), proportional to the undelivered
+        fraction; the stale flow is cancelled to free its bandwidth."""
+        extra = 0.0
+        for gg in range(g + 1):
+            for fid in list(bs.s1_pending.get(gg, ())):
+                fl = self.flows[fid]
+                if fl.state != FlowState.PRUNED or fl.remaining <= 0:
+                    continue
+                if (fl.rid, gg) in bs.recomputed:
+                    continue
+                bs.recomputed.add((fl.rid, gg))
+                it = next(i for i in bs.items if i.rid == fl.rid)
+                frac = fl.remaining / max(fl.size, 1e-9)
+                extra += self.profile.recompute_time(it.reuse, frac, gg)
+                bs.s1_pending[gg].discard(fid)
+                if fid in self.net.flows:
+                    self.net.remove(fl)
+                self.policy.on_flow_completed(fl, self.view)
+        return extra
+
+    # --------------------------------------------------------- event handlers
+    def _on_arrival(self, item: PrefillItem) -> None:
+        u = self.host.route(item)           # may refine reuse / owner_unit
+        item.unit = u
+        item.ideal_ttft = self.profile.ideal_ttft(item)
+        if self.slo_mode == "fixed" and self._slo_budget is not None:
+            item.deadline = item.arrival + self._slo_budget
+        else:
+            item.deadline = item.arrival + self.slo_scale * item.ideal_ttft
+        self.queues[u].append(item)
+        self.backlog_tokens[u] += item.n_tokens
+        self.host.on_admitted(item)
+        self._maybe_start_batch(u)
+
+    def _on_compute_done(self, bid: int, unit: int, g: int) -> None:
+        bs = self.active_batch.get(unit)
+        if bs is None or bs.bid != bid or bs.cur_group != g or bs.phase != "compute":
+            return   # stale
+        for f in self.emitter.stage3(bs, g, self._t_first_decode):
+            self._submit(f)
+        co = self.emitter.stage2(bs)
+        if co is not None:
+            co.started = self.net.now
+            for fl in co.flows:
+                self._submit(fl)
+            bs.coll = co
+            bs.coll_started = self.net.now
+            bs.phase = "wait_coll"
+            self._resched(("layer", unit))
+            return
+        self._advance_group(bs)
+        self._resched(("layer", unit))
+
+    def _advance_group(self, bs: BatchState) -> None:
+        bs.cur_group += 1
+        bs.coll = None
+        if bs.cur_group >= self._G:
+            bs.compute_done_at = self.net.now
+            for it in bs.items:
+                it.prefill_done = self.net.now
+                self._maybe_finish_request(it, bs)
+            bs.phase = "drain"
+            del self.active_batch[bs.unit]
+            self.backlog_tokens[bs.unit] = max(
+                0.0, self.backlog_tokens[bs.unit] - bs.tokens)
+            self._arm_tick()
+            if self.policy.uses_inter_request:
+                self._run_inter_request()
+            self._maybe_start_batch(bs.unit)
+        else:
+            self._try_start_group(bs)
+
+    def _maybe_finish_request(self, item: PrefillItem, bs: BatchState) -> None:
+        if item.ttft is not None or item.prefill_done is None:
+            return
+        # Completion requires every *actually emitted* P2D flow to be done.
+        # (Counting groups instead would deadlock requests whose KV-light
+        # groups emitted no flow at all.) prefill_done is only set after the
+        # last group ran, so the emitted set is final here.
+        pending = bs.p2d_pending.get(item.rid, set())
+        if all(self.flows[f].state == FlowState.DONE for f in pending):
+            last = max((self.flows[f].finished or 0.0) for f in pending) \
+                if pending else item.prefill_done
+            item.ttft = max(item.prefill_done, last) - item.arrival \
+                + self._t_first_decode
+            self.batch_of_request.pop(item.rid, None)
+            self.host.on_request_done(item, bs)
+
+    def _on_flow_done(self, f: Flow) -> None:
+        self.policy.on_flow_completed(f, self.view)
+        bs = self.batch_of_request.get(f.rid)
+        if f.stage == Stage.KV_REUSE:
+            if bs is not None:
+                bs.s1_pending.get(f.target_layer, set()).discard(f.fid)
+                if bs.phase == "wait_s1":
+                    self._try_start_group(bs)
+        elif f.stage == Stage.COLLECTIVE:
+            if bs is not None and bs.coll is not None and f.coflow == bs.coll.cid:
+                if bs.coll.done():
+                    bs.coll.finished = self.net.now
+                    co = bs.coll
+                    self.host.on_coflow_done(bs, co, self._coflow_ideal(co))
+                    if bs.phase == "wait_coll":
+                        self._advance_group(bs)
+        else:  # P2D
+            if bs is not None:
+                self._maybe_finish_request(
+                    next(i for i in bs.items if i.rid == f.rid), bs)
+
+    def _coflow_ideal(self, co: Coflow) -> float:
+        worst = 0.0
+        for f in co.flows:
+            route = self.topo.route(f.src, f.dst, f.fid)
+            cap = min((self.topo.capacity[l] for l in route), default=2e12)
+            worst = max(worst, f.size / cap)
+        return worst
+
+    def _arm_tick(self) -> None:
+        if not self._tick_armed:
+            self._tick_armed = True
+            self.evq.push(self.net.now + self.tick_interval, "tick", None)
+
+    def _on_tick(self) -> None:
+        self._tick_armed = False
+        post = [f for f in self.net.flows.values()
+                if f.stage == Stage.P2D and not self.view.computing(f.rid)]
+        if post:
+            self._resched(("tick",))
+            self._arm_tick()
+
+    # ------------------------------------------------- Algorithm 1 coupling
+    def _run_inter_request(self) -> None:
+        batches: List[BatchLoad] = []
+        n_ports = 2 * self.topo.n_nodes       # NIC up/down links
+        for bs in self.active_batch.values():
+            loads: Dict[int, np.ndarray] = {}
+            deadlines: Dict[int, float] = {}
+            for it in bs.items:
+                v = np.zeros(n_ports)
+                for fid_set in list(bs.s1_pending.values()):
+                    for fid in fid_set:
+                        fl = self.flows[fid]
+                        if fl.rid != it.rid or fl.state == FlowState.DONE:
+                            continue
+                        for lid in self.topo.route(fl.src, fl.dst, fl.fid):
+                            if lid < n_ports:
+                                v[lid] += fl.remaining
+                rem_kv = it.n_tokens * sum(
+                    self.profile.kv_bytes_group(g)
+                    for g in range(bs.cur_group, self._G))
+                ep = self.emitter.rank_endpoint(bs, it, bs.cur_group)
+                v[2 * ep] += rem_kv           # future P2D leaves via this NIC
+                loads[it.rid] = v
+                deadlines[it.rid] = it.deadline
+            rem_groups = len(bs.group_time) - bs.cur_group
+            comp = sum(bs.group_time[bs.cur_group:]) + bs.recompute_extra * rem_groups
+            batches.append(BatchLoad(bs.bid, loads, deadlines, comp))
+        if not batches:
+            return
+        port_bw = np.array([self.topo.capacity[l] for l in range(n_ports)])
+        # Algorithm 1 takes a GLOBAL total drop budget; spend it across the
+        # whole run so overload control cannot death-spiral the cluster.
+        budget_left = max(0, self.drop_budget - self.n_pruned)
+        sched = inter_request_schedule(batches, port_bw, now=self.net.now,
+                                       drop_budget=budget_left)
+        rank_of_batch = {bid: i for i, bid in enumerate(sched.order)}
+        newly_pruned = {rid for (_, rid) in sched.pruned}
+        for bs in self.active_batch.values():
+            for it in bs.items:
+                self.red_ranks[it.rid] = rank_of_batch.get(bs.bid, 0)
+        # soft enforcement: demote pruned requests' flows, abandon their reuse
+        for bs in self.active_batch.values():
+            for it in bs.items:
+                if it.rid in newly_pruned and it.rid not in self.pruned_rids:
+                    self.pruned_rids.add(it.rid)
+                    self.ever_pruned.add(it.rid)
+                    self.n_pruned += 1
+                    self._apply_prune(bs, it)
+        # re-admission: requests no longer in the pruned set
+        for rid in list(self.pruned_rids):
+            if rid not in newly_pruned and rid in self.batch_of_request:
+                self.pruned_rids.discard(rid)
+                for f in self.net.flows.values():
+                    if f.rid == rid and f.state == FlowState.PRUNED:
+                        f.state = FlowState.ACTIVE
+                        if isinstance(self.policy, MFSScheduler):
+                            self.policy.readmit(f, self.view)
+
+    def _apply_prune(self, bs: BatchState, item: PrefillItem) -> None:
+        """Soft enforcement (Appendix B Step 3): demote the request's
+        KV-reuse and P2D flows to the scavenger class. Scavenged Stage-1
+        flows no longer block the batch; whatever has not arrived by the time
+        its layer group runs is recomputed (paid in _recompute_penalty)."""
+        for f in list(self.net.flows.values()):
+            if f.rid != item.rid or f.stage == Stage.COLLECTIVE:
+                continue
+            f.state = FlowState.PRUNED
+            if isinstance(self.policy, MFSScheduler):
+                self.policy.prune(f)
+        if bs.phase == "wait_s1":
+            self._try_start_group(bs)
+
+    # ------------------------------------------------------------------ run
+    def run(self, max_events: int = 5_000_000) -> None:
+        """Drain the event queue (arrivals must already be pushed)."""
+        n_ev = 0
+        while self.evq and n_ev < max_events:
+            popped = self.evq.pop()
+            if popped is None:
+                break
+            t, kind, payload, epoch = popped
+            n_ev += 1
+            done = self.net.advance(t)
+            for f in done:
+                self._on_flow_done(f)
+            if kind == "arr":
+                self._on_arrival(payload)
+                self._resched(("submit",))
+            elif kind == "compute":
+                self._on_compute_done(*payload)
+            elif kind == "tick":
+                self._on_tick()
+            elif kind == "net":
+                if done:
+                    self._resched(("event",))
+                elif epoch == self._epoch:
+                    # numerically-stalled prediction; force refresh
+                    self._resched(("event",))

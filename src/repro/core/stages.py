@@ -1,0 +1,364 @@
+"""Stage-emission layer of the shared MsFlow runtime (§3.1 + §5).
+
+One implementation of the per-layer-group flow construction that both the
+cluster simulator (``repro.simcluster``) and the real-JAX serving path
+(``repro.serving``) drive through :class:`repro.core.runtime.MsFlowRuntime`:
+
+  * Stage 1 — per-layer-group KV-reuse fetch flows from the prefix owner
+    unit; the group-g slice must arrive before super-layer g computes.
+  * Stage 2 — collective coflows per super-layer group: NIC-aggregated
+    all-to-all for EP, ring KV exchange striped over TP endpoints for SP,
+    scale-up all-reduce for TP. A coflow gates the next group's compute.
+  * Stage 3 — P2D transfer of the group's produced KV toward the decode
+    unit, carrying the explicit flow-level deadline derived from the
+    request's TTFT deadline minus the remaining downstream work (§3.2).
+
+The module is control-plane only (no JAX) and host-agnostic: all model math
+comes from :class:`StageProfile`, an analytic latency/volume model over an
+``ArchConfig`` + hardware profile, shared verbatim by simulation and
+serving so both paths emit byte-identical stage sequences for matched
+configurations (the pluggability claim of §5).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence, Set, Tuple
+
+import numpy as np
+
+from .msflow import Coflow, Flow, Stage, new_flow_id
+
+__all__ = [
+    "ParallelismSpec",
+    "GroupPlan",
+    "StageProfile",
+    "PrefillItem",
+    "BatchState",
+    "StageEmitter",
+]
+
+
+@dataclass(frozen=True)
+class ParallelismSpec:
+    """Parallelism of one prefill unit (one model replica).
+
+    ``gpus`` is the number of NIC-attached endpoints the unit spans; the
+    three modes reproduce the paper's Stage-2 traffic shapes (§6.1/§7).
+    """
+
+    mode: str = "ep"        # ep | sp | tp
+    tp: int = 1
+    ep: int = 1
+    sp: int = 1
+
+    @property
+    def gpus(self) -> int:
+        return self.tp * max(self.ep, 1) * max(self.sp, 1)
+
+
+@dataclass(frozen=True)
+class GroupPlan:
+    """Partition of a model's L layers into G contiguous super-layers."""
+
+    n_layers: int
+    groups: Tuple[Tuple[int, ...], ...]
+
+    @classmethod
+    def build(cls, n_layers: int, n_groups: int) -> "GroupPlan":
+        G = max(1, min(n_groups, n_layers))
+        bounds = np.linspace(0, n_layers, G + 1).astype(int)
+        return cls(n_layers=n_layers,
+                   groups=tuple(tuple(range(bounds[g], bounds[g + 1]))
+                                for g in range(G)))
+
+    def __len__(self) -> int:
+        return len(self.groups)
+
+    def layers(self, g: int) -> Tuple[int, ...]:
+        return self.groups[g]
+
+
+@dataclass
+class PrefillItem:
+    """One request as seen by the runtime: token counts + reuse + deadline.
+
+    Hosts attach their own request object via ``payload`` (the simulator's
+    trace ``Request``, the server's ``ServeRequest`` + prefix-index entry).
+    """
+
+    rid: int
+    arrival: float
+    n_tokens: int                      # prompt length
+    reuse: int = 0                     # reused prefix tokens (Stage 1)
+    owner_unit: int = 0                # unit owning the reused prefix
+    payload: Any = None
+    # --- filled by the runtime ---
+    unit: int = -1
+    deadline: float = 0.0
+    ideal_ttft: float = 0.0
+    stalls: float = 0.0
+    prefill_done: Optional[float] = None
+    ttft: Optional[float] = None
+
+
+@dataclass
+class BatchState:
+    """Lifecycle of one prefill batch on one unit."""
+
+    bid: int
+    unit: int
+    items: List[PrefillItem]
+    group_time: List[float]            # compute seconds per super-layer group
+    started: float = 0.0
+    cur_group: int = 0
+    phase: str = "wait_s1"             # wait_s1 | compute | wait_coll | drain
+    stall_begin: Optional[float] = None
+    s1_pending: Dict[int, Set[int]] = field(default_factory=dict)  # group -> fids
+    coll: Optional[Coflow] = None
+    coll_started: float = 0.0
+    p2d_pending: Dict[int, Set[int]] = field(default_factory=dict)  # rid -> fids
+    recompute_extra: float = 0.0       # legacy aggregate (kept for estimates)
+    recomputed: Set[Tuple[int, int]] = field(default_factory=set)   # (rid, group)
+    compute_done_at: Optional[float] = None
+
+    @property
+    def tokens(self) -> int:
+        return sum(i.n_tokens for i in self.items)
+
+
+class StageProfile:
+    """Analytic model math shared by simulation and serving (§6.1).
+
+    Derives compute latencies, per-group KV volumes, Stage-2 collective
+    volumes and contention-free (ideal) TTFTs from an ``ArchConfig`` and a
+    hardware profile. Instances are duck-typed over ``model`` (needs
+    ``n_layers``/``kv_bytes_per_token_layer``/``flops_per_token``/
+    ``params_active``/``state_bytes``/``is_moe_layer``/``top_k``/``d_model``)
+    and ``hw`` (needs ``flops``/``mfu``/``nic_bw``) so repro.core stays free
+    of upward imports.
+    """
+
+    def __init__(self, model: Any, hw: Any, par: ParallelismSpec,
+                 plan: GroupPlan, kv_dtype_bytes: int = 2,
+                 act_dtype_bytes: int = 2, gpus_per_server: int = 4):
+        self.model = model
+        self.hw = hw
+        self.par = par
+        self.plan = plan
+        self.kv_dtype_bytes = kv_dtype_bytes
+        self.act_dtype_bytes = act_dtype_bytes
+        self.gpus_per_server = gpus_per_server
+
+    # ------------------------------------------------------------ KV volumes
+    def kv_bytes_group(self, g: int) -> float:
+        """Per-token KV bytes produced by super-layer group ``g``."""
+        m, b = self.model, self.kv_dtype_bytes
+        return sum(m.kv_bytes_per_token_layer(b, l) for l in self.plan.layers(g))
+
+    def state_bytes_group(self) -> float:
+        """Per-request O(1) recurrent state shipped with each P2D group."""
+        return self.model.state_bytes(self.kv_dtype_bytes) / len(self.plan)
+
+    # --------------------------------------------------------------- compute
+    def group_compute_time(self, items: Sequence[PrefillItem], g: int) -> float:
+        """Analytic compute latency of one super-layer group for a batch."""
+        m, hw, par = self.model, self.hw, self.par
+        L = m.n_layers
+        flops = 0.0
+        for it in items:
+            new = max(1, it.n_tokens - it.reuse)
+            ctx = it.reuse + new / 2.0
+            flops += new * m.flops_per_token(ctx) / L * len(self.plan.layers(g))
+        return flops / (par.gpus * hw.flops * hw.mfu)
+
+    def first_decode_time(self) -> float:
+        m, hw, par = self.model, self.hw, self.par
+        return 2.0 * m.params_active() / (par.gpus * hw.flops * hw.mfu * 0.3)
+
+    def recompute_time(self, reuse_tokens: int, frac: float, g: int) -> float:
+        """Compute seconds to re-derive the fraction ``frac`` of a request's
+        reused KV for group ``g`` that pruning left undelivered."""
+        m, hw, par = self.model, self.hw, self.par
+        nlayers = len(self.plan.layers(g))
+        flops = frac * reuse_tokens * m.flops_per_token(reuse_tokens / 2) \
+            / m.n_layers * nlayers
+        return flops / (par.gpus * hw.flops * hw.mfu)
+
+    # ------------------------------------------------------------ collectives
+    def stage2_volume_per_ep(self, tokens: float, g: int) -> float:
+        """Bytes leaving ONE endpoint for group g's collectives (network)."""
+        m, par, d = self.model, self.par, self.act_dtype_bytes
+        nlayers = len(self.plan.layers(g))
+        if par.mode == "ep":
+            moe_layers = sum(1 for l in self.plan.layers(g) if m.is_moe_layer(l))
+            per_layer = 2.0 * (tokens / par.ep) * m.top_k * m.d_model * d
+            return per_layer * moe_layers    # cross-fabric share applied by caller
+        if par.mode == "sp":
+            vol = 0.0
+            for l in self.plan.layers(g):
+                kvb = m.kv_bytes_per_token_layer(self.act_dtype_bytes, l)
+                vol += (par.sp - 1) * (tokens / par.sp) * kvb
+            return vol / par.tp              # striped across TP endpoints
+        # tp: 2 all-reduce per layer, ring cost, scale-up only
+        return 2.0 * 2.0 * (par.tp - 1) / par.tp * tokens * m.d_model * d * nlayers / par.tp
+
+    # ----------------------------------------------------------- ideal TTFT
+    def ideal_ttft(self, item: PrefillItem) -> float:
+        """Low-load (contention-free) TTFT for SLO calibration (§6.1)."""
+        par, hw = self.par, self.hw
+        total = 0.0
+        for g in range(len(self.plan)):
+            total += self.group_compute_time([item], g)
+            if par.mode == "ep":
+                eps_per_server = min(self.gpus_per_server, par.gpus)
+                cross = 1.0 - eps_per_server / max(par.gpus, 1)
+                v = self.stage2_volume_per_ep(item.n_tokens - item.reuse, g) * cross
+                total += v / hw.nic_bw
+            elif par.mode == "sp":
+                v = self.stage2_volume_per_ep(item.n_tokens, g)
+                total += v / hw.nic_bw
+        # stage-1 of group 0 cannot be hidden even without contention
+        if item.reuse:
+            total += item.reuse * self.kv_bytes_group(0) / hw.nic_bw
+        # last group's P2D is never overlapped with compute
+        total += item.n_tokens * self.kv_bytes_group(len(self.plan) - 1) / hw.nic_bw
+        return total + self.first_decode_time()
+
+
+class StageEmitter:
+    """Builds the Stage-1/2/3 flow sets for a batch (§3.1).
+
+    Pure flow construction: registers pending-set bookkeeping on the
+    ``BatchState`` but never submits — the runtime owns submission, so the
+    same emitter serves both the simulator and the real-JAX data plane.
+    """
+
+    def __init__(self, profile: StageProfile, unit_eps: Sequence[Sequence[int]],
+                 decode_eps: Sequence[int], topo: Any):
+        self.profile = profile
+        self.par = profile.par
+        self.plan = profile.plan
+        self.unit_eps = [list(e) for e in unit_eps]
+        self.decode_eps = list(decode_eps)
+        self.topo = topo
+
+    # ----------------------------------------------------------- placement
+    def rank_endpoint(self, bs: BatchState, item: PrefillItem, g: int) -> int:
+        """Endpoint that owns ``item``'s activations for group g."""
+        eps = self.unit_eps[bs.unit]
+        if self.par.mode == "ep":
+            idx = bs.items.index(item) % len(eps)
+            return eps[idx]
+        # sp / tp: stripe across endpoints by group for multi-NIC egress
+        return eps[g % len(eps)]
+
+    # -------------------------------------------------------------- stage 1
+    def stage1(self, bs: BatchState) -> List[Flow]:
+        """Per-layer-group KV-reuse fetch flows from each item's owner unit."""
+        G = len(self.plan)
+        out: List[Flow] = []
+        for item in bs.items:
+            if item.reuse <= 0:
+                continue
+            src_eps = self.unit_eps[item.owner_unit]
+            for g in range(G):
+                size = item.reuse * self.profile.kv_bytes_group(g)
+                if size <= 0:
+                    continue
+                if self.par.mode == "sp":
+                    ueps = self.unit_eps[bs.unit]
+                    dsts = [ueps[(g + i) % len(ueps)] for i in range(self.par.sp)]
+                    sizes = [size / self.par.sp] * self.par.sp
+                else:
+                    dsts = [self.rank_endpoint(bs, item, g)]
+                    sizes = [size]
+                for dst, sz in zip(dsts, sizes):
+                    f = Flow(new_flow_id(), item.rid, bs.unit, Stage.KV_REUSE,
+                             sz, src=src_eps[g % len(src_eps)], dst=dst,
+                             target_layer=g, n_layers=G)
+                    bs.s1_pending.setdefault(g, set()).add(f.fid)
+                    out.append(f)
+        return out
+
+    # -------------------------------------------------------------- stage 2
+    def stage2(self, bs: BatchState) -> Optional[Coflow]:
+        """Collective coflow of the current group (gates the next group)."""
+        par, profile = self.par, self.profile
+        g = bs.cur_group
+        G = len(self.plan)
+        tokens = sum(max(1, it.n_tokens - it.reuse) for it in bs.items)
+        eps = self.unit_eps[bs.unit]
+        co = Coflow(cid=new_flow_id(), rid=bs.items[0].rid, unit=bs.unit,
+                    stage=Stage.COLLECTIVE, layer=g)
+        if par.mode == "ep":
+            vol_per_ep = profile.stage2_volume_per_ep(tokens, g)
+            if vol_per_ep <= 0:
+                return None
+            servers: Dict[int, List[int]] = {}
+            for e in eps:
+                servers.setdefault(self.topo.server_of(e), []).append(e)
+            for e in eps:
+                my_srv = self.topo.server_of(e)
+                for srv, members in servers.items():
+                    if srv == my_srv:
+                        continue
+                    dst = members[eps.index(e) % len(members)]
+                    sz = vol_per_ep * len(members) / len(eps)
+                    fl = Flow(new_flow_id(), co.rid, bs.unit, Stage.COLLECTIVE,
+                              sz, src=e, dst=dst, target_layer=g, n_layers=G)
+                    fl.coflow = co.cid
+                    co.flows.append(fl)
+        elif par.mode == "sp":
+            vol = profile.stage2_volume_per_ep(
+                sum(it.n_tokens for it in bs.items), g)
+            if vol <= 0:
+                return None
+            sp, tp = par.sp, par.tp
+            for rank in range(sp):
+                nxt_rank = (rank + 1) % sp
+                for t in range(tp):
+                    src = eps[rank * tp + t]
+                    dst = eps[nxt_rank * tp + t]
+                    fl = Flow(new_flow_id(), co.rid, bs.unit, Stage.COLLECTIVE,
+                              vol, src=src, dst=dst, target_layer=g, n_layers=G)
+                    fl.coflow = co.cid
+                    co.flows.append(fl)
+        else:   # tp: scale-up all-reduce flows between neighbouring endpoints
+            vol = profile.stage2_volume_per_ep(tokens, g)
+            if vol <= 0:
+                return None
+            for i, e in enumerate(eps):
+                dst = eps[(i + 1) % len(eps)]
+                if dst == e:
+                    continue
+                fl = Flow(new_flow_id(), co.rid, bs.unit, Stage.COLLECTIVE,
+                          vol, src=e, dst=dst, target_layer=g, n_layers=G)
+                fl.coflow = co.cid
+                co.flows.append(fl)
+        if not co.flows:
+            return None
+        return co
+
+    # -------------------------------------------------------------- stage 3
+    def stage3(self, bs: BatchState, g: int, t_first_decode: float) -> List[Flow]:
+        """P2D flows for group g with the derived flow-level deadline."""
+        G = len(self.plan)
+        kvb = self.profile.kv_bytes_group(g)
+        state_b = self.profile.state_bytes_group()
+        out: List[Flow] = []
+        for item in bs.items:
+            size = item.n_tokens * kvb + state_b
+            if size <= 0:
+                continue
+            dst = self.decode_eps[(item.rid + g) % len(self.decode_eps)] \
+                if self.decode_eps else self.rank_endpoint(bs, item, g)
+            # Flow-level deadline = TTFT deadline minus remaining downstream
+            # work (the first decode step) — the paper's "global TTFT
+            # materialises into an explicit flow-level bound" (§3.2).
+            f = Flow(new_flow_id(), item.rid, bs.unit, Stage.P2D, size,
+                     src=self.rank_endpoint(bs, item, g), dst=dst,
+                     target_layer=g, n_layers=G,
+                     deadline=item.deadline - t_first_decode)
+            bs.p2d_pending[item.rid].add(f.fid)
+            out.append(f)
+        return out

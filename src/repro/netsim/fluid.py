@@ -21,6 +21,8 @@ from __future__ import annotations
 import math
 from typing import Dict, Iterable, List, Optional, Tuple
 
+import numpy as np
+
 from ..core.msflow import Flow, FlowState
 from .topology import Topology
 
@@ -88,16 +90,38 @@ class FluidNet:
         for key in sorted(groups):
             self._fill_group(groups[key], residual)
 
+    #: group size at which the numpy water-filling overtakes the dict walk
+    #: (measured on FatTree(8x8): the matrix path is ~3x faster at 512
+    #: flows/group but ~4x slower at <64 because of per-round numpy setup)
+    VEC_THRESHOLD = 96
+
     def _fill_group(self, members: List[Flow], residual: Dict[int, float]) -> None:
-        rate = {f.fid: 0.0 for f in members}
-        unfrozen = {f.fid: f for f in members}
+        rate = {}
+        routed: List[Flow] = []
         # local (routeless) flows drain immediately at LOCAL_BW
-        for fid in list(unfrozen):
-            f = unfrozen[fid]
-            if not self.routes[fid]:
-                r = LOCAL_BW if f.rate_cap is None else min(LOCAL_BW, f.rate_cap)
-                rate[fid] = r
-                del unfrozen[fid]
+        for f in members:
+            if not self.routes[f.fid]:
+                rate[f.fid] = LOCAL_BW if f.rate_cap is None \
+                    else min(LOCAL_BW, f.rate_cap)
+            else:
+                routed.append(f)
+        if len(routed) >= self.VEC_THRESHOLD:
+            self._waterfill_vec(routed, residual, rate)
+        elif routed:
+            self._waterfill_scalar(routed, residual, rate)
+        for f in members:
+            f.rate = rate[f.fid]
+            for lid in self.routes[f.fid]:
+                self._link_rate[lid] = self._link_rate.get(lid, 0.0) + f.rate
+                self._link_members.setdefault(lid, []).append(f)
+
+    def _waterfill_scalar(self, routed: List[Flow], residual: Dict[int, float],
+                          rate: Dict[int, float]) -> None:
+        """Progressive filling with per-flow dict walks — wins for the small
+        groups produced by per-flow priority keys (SJF, EDF tie-breaks)."""
+        unfrozen = {f.fid: f for f in routed}
+        for f in routed:
+            rate[f.fid] = 0.0
         while unfrozen:
             # population of unfrozen flows per link
             nflows: Dict[int, int] = {}
@@ -130,11 +154,54 @@ class FluidNet:
                 break
             for fid in newly_frozen:
                 del unfrozen[fid]
-        for f in members:
-            f.rate = rate[f.fid]
+
+    def _waterfill_vec(self, routed: List[Flow], residual: Dict[int, float],
+                       rate: Dict[int, float]) -> None:
+        """Progressive filling over the group's route-incidence matrix
+        A[link, flow]: each round raises every unfrozen flow by the smallest
+        constraint (fair share of the tightest link, or the nearest rate
+        cap), then freezes flows at cap or on a saturated link — the same
+        fixpoint as the scalar walk, in O(rounds) vector ops. Wins for the
+        wide single-key groups of FairShare and shared RMLQ bands."""
+        lids = sorted({lid for f in routed for lid in self.routes[f.fid]})
+        lidx = {lid: i for i, lid in enumerate(lids)}
+        A = np.zeros((len(lids), len(routed)))
+        for j, f in enumerate(routed):
             for lid in self.routes[f.fid]:
-                self._link_rate[lid] = self._link_rate.get(lid, 0.0) + f.rate
-                self._link_members.setdefault(lid, []).append(f)
+                A[lidx[lid], j] = 1.0
+        AT = np.ascontiguousarray(A.T)
+        res = np.array([residual[lid] for lid in lids])
+        caps = np.array([math.inf if f.rate_cap is None else f.rate_cap
+                         for f in routed])
+        rates = np.zeros(len(routed))
+        active = np.ones(len(routed))
+        while True:
+            counts = A @ active
+            used = counts > 0.0
+            # smallest incremental fair share over saturating constraints
+            share = np.where(used, np.maximum(res, 0.0)
+                             / np.where(used, counts, 1.0), math.inf)
+            headroom = np.where(active > 0.0, caps - rates, math.inf)
+            inc = min(share.min(initial=math.inf),
+                      headroom.min(initial=math.inf))
+            if inc < 0:
+                inc = 0.0
+            if not math.isfinite(inc):
+                break
+            rates += active * inc
+            res -= counts * inc
+            # freeze: flows at cap, flows crossing a saturated link
+            newly = active * (((rates >= caps - _EPS)
+                               | (AT @ (res <= _EPS) > 0.0)))
+            if not newly.any():       # numerical guard: freeze everything
+                break
+            active -= newly
+            if not active.any():
+                break
+        for lid, i in lidx.items():
+            residual[lid] = float(res[i])
+        for j, f in enumerate(routed):
+            rate[f.fid] = float(rates[j])
 
     # --------------------------------------------------------------- queries
     def next_completion(self) -> Optional[Tuple[float, Flow]]:

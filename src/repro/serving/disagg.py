@@ -1,47 +1,57 @@
 """Disaggregated serving orchestrator — real JAX data plane, scheduled
 transfers on a virtual network.
 
-This is the paper's §5 integration re-based onto the JAX engine: every
-transfer the serving system performs is driven through the three
-standardized primitives
+This is the paper's §5 integration re-based onto the shared MsFlow runtime
+(``repro.core.runtime``): the event loop, per-layer-group stage emission
+(Stage-1 KV-reuse fetches, Stage-2 collectives, Stage-3 P2D with deadline
+derivation), SLO calibration and the policy-facing SchedView are the same
+objects the cluster simulator drives — MFS is exercised at full fidelity
+(RMLQ promotion, Algorithm 1 RED ordering + feasibility pruning, scavenger
+readmission) on the real-JAX path, with no degenerate stubs.
 
-    submit(task-with-metadata)  ->  fid
-    permit(fid, priority)           (the policy's assign() on the RMLQ)
-    completion(fid)                 (fires the dependent continuation)
+What this module contributes is the *data plane*:
 
-with the policy (MFS or any baseline) deciding priorities and a fluid
-network model (repro.netsim) playing the role of the fabric. Computation is
-*real* — prefill and decode run the actual model on this host — while its
-latency on the target cluster comes from the analytic operator model, so
-the virtual clock reflects target-hardware timing. Computation events and
-network events share one EventQueue (§6.1).
+  * prefill units run the actual model (``ServingEngine``) — results are
+    exact; latency on the target cluster comes from the shared analytic
+    ``StageProfile``, so the virtual clock reflects target-hardware timing;
+  * KV-aware routing over a content-addressed ``PrefixIndex`` (real pages);
+  * queued multi-request prefill batching per unit (token-capped, like the
+    simulator) instead of one-request-at-a-time service;
+  * decode via slotted continuous batching on the decode unit (real tokens).
 
 Request lifecycle (one MsFlow chain per request, §3.1):
-  arrival -> route to a prefill unit (KV-aware)
-    Stage 1: prefix-index hit on a remote owner => KV-reuse fetch flow
-    compute: per-layer-group; at each boundary a "layer" trigger promotes
-             (RMLQ), Stage-2 collective coflows gate the next group, and the
-             group's P2D KV (Stage 3) is submitted with the TTFT deadline
+  arrival -> route to a prefill unit (prefix-affinity vs. backlog)
+    Stage 1: prefix-index hit => per-layer-group KV-reuse flows from the
+             owner unit; group g's slice gates super-layer g's compute
+    compute: per super-layer group; at each boundary a "layer" trigger
+             promotes (RMLQ), Stage-2 coflows gate the next group, and the
+             group's P2D KV (Stage 3) carries the derived TTFT deadline
     TTFT   = completion of the last P2D flow + first decode step
   decode  -> slotted continuous batching on the decode unit (real tokens).
+
+Pruned requests (Algorithm 1) keep their *results* exact: the prefix pages
+are local, so the real prefill still reuses them — only the modeled clock
+pays the recompute penalty for KV the scavenged Stage-1 flow never
+delivered, exactly as the simulator charges it.
 """
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence
 
 import numpy as np
 
-from ..core import MFSScheduler, Policy, Stage
-from ..core.msflow import Coflow, Flow, FlowState, new_flow_id
-from ..models.lm import Model
+from ..core import MFSScheduler, Policy
+from ..core.runtime import MsFlowRuntime, RuntimeHost
+from ..core.stages import (BatchState, GroupPlan, ParallelismSpec,
+                           PrefillItem, StageEmitter, StageProfile)
 from ..netsim.events import EventQueue
 from ..netsim.fluid import FluidNet
 from ..netsim.topology import SingleToR
 from ..simcluster.hw import HW, TPU_V5E
 from .engine import DecodeBatch, ServingEngine
-from .paged_kv import PagedStore, PrefixIndex, cache_bytes, cache_has_state
+from .paged_kv import PagedStore, PrefixIndex, cache_has_state
 
 __all__ = ["DisaggServer", "ServeRequest", "ServeResult", "DisaggConfig"]
 
@@ -65,6 +75,7 @@ class ServeResult:
     tokens: List[int] = field(default_factory=list)
     reused_tokens: int = 0
     unit: int = -1
+    pruned: bool = False
 
 
 @dataclass(frozen=True)
@@ -78,14 +89,26 @@ class DisaggConfig:
     decode_capacity: int = 256
     decode_slots: int = 8
     kv_dtype_bytes: int = 2
-    ep: int = 1                     # modeled expert-parallel width per unit
-    gpus_per_unit: int = 1
+    gpus_per_unit: int = 1          # endpoints (= modeled EP ranks) per unit
+    max_batch_tokens: int = 8192    # prefill batch cap per unit
+    tick_interval: float = 2e-3     # post-compute MLU re-evaluation pitch
+    drop_budget: int = 32           # Algorithm 1 global drop budget B
 
 
-class DisaggServer:
+@dataclass
+class _ServeJob:
+    """Data-plane state riding on a PrefillItem as its payload."""
+
+    req: ServeRequest
+    entry: Any = None               # PrefixIndex hit backing the reuse
+    cache: Any = None
+    first_token: int = -1
+
+
+class DisaggServer(RuntimeHost):
     """One decode unit + N prefill units sharing a ToR, MFS-scheduled."""
 
-    def __init__(self, model: Model, params: Any, policy: Policy = None,
+    def __init__(self, model: Any, params: Any, policy: Policy = None,
                  cfg: DisaggConfig = DisaggConfig()):
         self.model = model
         self.params = params
@@ -93,101 +116,117 @@ class DisaggServer:
         self.policy = policy if policy is not None else MFSScheduler()
         self.policy.reset()
 
-        n_ep = cfg.n_prefill_units * cfg.gpus_per_unit + 1   # +1 decode unit
-        self.topo = SingleToR(n_ep, nic_bw=cfg.hw.nic_bw,
+        n_prefill = cfg.n_prefill_units * cfg.gpus_per_unit
+        self.topo = SingleToR(n_prefill + 1, nic_bw=cfg.hw.nic_bw,
                               gpus_per_server=cfg.gpus_per_unit,
                               scaleup_bw=cfg.hw.scaleup_bw)
-        self.net = FluidNet(self.topo)
-        self.evq = EventQueue()
+        mcfg = model.cfg
+        par = ParallelismSpec(mode="ep", ep=cfg.gpus_per_unit)
+        plan = GroupPlan.build(mcfg.n_layers,
+                               min(cfg.layer_groups, mcfg.n_layers))
+        self.profile = StageProfile(
+            model=mcfg, hw=cfg.hw, par=par, plan=plan,
+            kv_dtype_bytes=cfg.kv_dtype_bytes, act_dtype_bytes=2,
+            gpus_per_server=cfg.gpus_per_unit)
+        unit_eps = [list(range(u * cfg.gpus_per_unit,
+                               (u + 1) * cfg.gpus_per_unit))
+                    for u in range(cfg.n_prefill_units)]
+        emitter = StageEmitter(self.profile, unit_eps,
+                               decode_eps=[n_prefill], topo=self.topo)
+        self.runtime = MsFlowRuntime(
+            self.topo, FluidNet(self.topo), EventQueue(), self.policy,
+            self.profile, emitter, host=self, n_units=cfg.n_prefill_units,
+            max_batch_tokens=cfg.max_batch_tokens, slo_scale=cfg.slo_scale,
+            slo_mode="per-request", tick_interval=cfg.tick_interval,
+            drop_budget=cfg.drop_budget)
+
         self.engines = [ServingEngine(model, params)
                         for _ in range(cfg.n_prefill_units)]
         self.decoder = DecodeBatch(model, params, capacity=cfg.decode_capacity,
                                    max_slots=cfg.decode_slots)
         self.store = PagedStore(cfg.page_size, cfg.n_pages)
         self.index = PrefixIndex(self.store)
-        self.view = _View(self)
-
-        mcfg = model.cfg
-        G = max(1, min(cfg.layer_groups, mcfg.n_layers))
-        bounds = np.linspace(0, mcfg.n_layers, G + 1).astype(int)
-        self._groups = [list(range(bounds[g], bounds[g + 1]))
-                        for g in range(G)]
-        self._epoch = 0
-        # per-request runtime state
-        self._req: Dict[int, _ReqState] = {}
-        self._unit_lcurr = [0] * cfg.n_prefill_units
-        self._unit_busy = [False] * cfg.n_prefill_units
-        self._unit_queue: List[List[ServeRequest]] = [
-            [] for _ in range(cfg.n_prefill_units)]
         self.results: Dict[int, ServeResult] = {}
 
-    # --------------------------------------------------------- flow plumbing
-    def _endpoint(self, unit: int, gpu: int = 0) -> int:
-        return unit * self.cfg.gpus_per_unit + gpu
-
     @property
-    def _decode_ep(self) -> int:
-        return self.cfg.n_prefill_units * self.cfg.gpus_per_unit
-
-    def _submit(self, flow: Flow) -> None:
-        flow.created = self.evq.now
-        self.net.add(flow)
-        self.policy.on_flow_submitted(flow, self.view)
-
-    def _resched(self, trigger=("event",)) -> None:
-        self.policy.assign(list(self.net.flows.values()), self.view, trigger)
-        self.net.reallocate()
-        self._epoch += 1
-        nxt = self.net.next_completion()
-        if nxt is not None:
-            self.evq.push(nxt[0], "net", None, epoch=self._epoch)
+    def net(self) -> FluidNet:
+        return self.runtime.net
 
     # ----------------------------------------------------------- model math
-    def _kv_bytes_per_token(self, layers: Sequence[int]) -> float:
+    def _kv_bytes_per_token(self) -> float:
         m, b = self.model.cfg, self.cfg.kv_dtype_bytes
-        return sum(m.kv_bytes_per_token_layer(b, l) for l in layers)
+        return sum(m.kv_bytes_per_token_layer(b, l)
+                   for l in range(m.n_layers))
 
-    def _group_time(self, n_new: int, ctx: float, g: int) -> float:
-        m, hw = self.model.cfg, self.cfg.hw
-        fl = n_new * m.flops_per_token(ctx) / m.n_layers * len(self._groups[g])
-        return fl / (self.cfg.gpus_per_unit * hw.flops * hw.mfu)
+    # ------------------------------------------------------------ host hooks
+    def route(self, item: PrefillItem) -> int:
+        """KV-aware routing: prefix affinity vs. per-unit token backlog."""
+        job: _ServeJob = item.payload
+        entry = self.index.match(job.req.tokens)
+        reuse = entry.n_tokens if entry else 0
+        if reuse >= len(job.req.tokens):    # guarantee >=1 suffix token
+            reuse, entry = 0, None
+        job.entry = entry
+        item.reuse = reuse
+        owner = entry.owner_unit if entry else None
+        best, best_score = 0, -math.inf
+        for u in range(self.cfg.n_prefill_units):
+            aff = reuse if u == owner else 0
+            score = 2.0 * aff - self.runtime.backlog_tokens[u]
+            if score > best_score:
+                best, best_score = u, score
+        item.owner_unit = owner if owner is not None else best
+        return best
 
-    def _stage2_bytes(self, n_new: int, g: int) -> float:
-        m = self.model.cfg
-        if self.cfg.ep <= 1 or m.n_experts == 0:
-            return 0.0
-        moe = sum(1 for l in self._groups[g] if m.is_moe_layer(l))
-        return 2.0 * (n_new / self.cfg.ep) * m.top_k * m.d_model * 2 * moe
+    def on_batch_started(self, bs: BatchState) -> None:
+        # REAL compute (results are exact; the virtual clock runs on the
+        # shared analytic profile). The prefix pages are host-local, so the
+        # data plane can reuse them even when the modeled Stage-1 flow is
+        # later pruned — only the clock pays the recompute penalty then.
+        for it in bs.items:
+            job: _ServeJob = it.payload
+            prefix_cache = self.index.fetch(job.entry) \
+                if job.entry is not None else None
+            first, cache, _ = self.engines[bs.unit].prefill(
+                job.req.tokens, prefix_cache=prefix_cache,
+                prefix_len=it.reuse, extra=job.req.extra)
+            job.first_token = first
+            job.cache = cache
 
-    def _ideal_ttft(self, r: ServeRequest, reuse: int) -> float:
-        hw = self.cfg.hw
-        n_new = max(1, len(r.tokens) - reuse)
-        ctx = reuse + n_new / 2.0
-        total = sum(self._group_time(n_new, ctx, g)
-                    for g in range(len(self._groups)))
-        if reuse:
-            total += reuse * self._kv_bytes_per_token(range(self.model.cfg.n_layers)) / hw.nic_bw
-        total += len(r.tokens) * self._kv_bytes_per_token(self._groups[-1]) / hw.nic_bw
-        return total
+    def on_request_done(self, item: PrefillItem, bs: BatchState) -> None:
+        job: _ServeJob = item.payload
+        r = job.req
+        res = ServeResult(
+            rid=r.rid, ttft=item.ttft, deadline=item.deadline,
+            met_slo=(item.arrival + item.ttft) <= item.deadline,
+            first_token=job.first_token, tokens=[job.first_token],
+            reused_tokens=item.reuse, unit=item.unit,
+            pruned=r.rid in self.runtime.ever_pruned)
+        self.results[r.rid] = res
+        # register the prefix for future reuse + hand off to the decode unit
+        if cache_has_state(job.cache):
+            self.index.insert_snapshot(r.tokens, job.cache, item.unit)
+        else:
+            try:
+                pages = self.store.put(job.cache, len(r.tokens))
+                self.index.insert_paged(r.tokens, pages, item.unit,
+                                        self._kv_bytes_per_token())
+                self.store.release(pages)   # index holds its own references
+            except MemoryError:
+                pass                         # pool full: skip registration
+        if self.decoder.n_active < self.cfg.decode_slots:
+            self.decoder.add(r.rid, job.cache, len(r.tokens),
+                             job.first_token, max_new=r.max_new)
+        job.cache = None
 
     # --------------------------------------------------------------- serving
     def serve(self, requests: Sequence[ServeRequest],
               decode_steps: int = 4) -> List[ServeResult]:
         for r in sorted(requests, key=lambda x: x.arrival):
-            self.evq.push(r.arrival, "arrival", r)
-        while self.evq:
-            t, kind, payload, epoch = self.evq.pop()
-            done = self.net.advance(t)
-            for f in done:
-                self._on_flow_done(f)
-            if kind == "net":
-                if epoch != self._epoch:
-                    continue            # stale completion prediction
-                self._resched()
-            elif kind == "arrival":
-                self._on_arrival(payload)
-            elif kind == "group_done":
-                self._on_group_done(*payload)
+            self.runtime.push_arrival(PrefillItem(
+                rid=r.rid, arrival=r.arrival, n_tokens=len(r.tokens),
+                payload=_ServeJob(req=r)))
+        self.runtime.run()
         # all prefills finished: run the decode continuation (real tokens)
         for _ in range(decode_steps):
             if not self.decoder.n_active:
@@ -195,220 +234,3 @@ class DisaggServer:
             for rid, tok in self.decoder.step().items():
                 self.results[rid].tokens.append(tok)
         return [self.results[r.rid] for r in requests]
-
-    # ---------------------------------------------------------------- events
-    def _on_arrival(self, r: ServeRequest) -> None:
-        entry = self.index.match(r.tokens)
-        # KV-aware routing: prefer the prefix owner, penalise busy units
-        owner = entry.owner_unit if entry else None
-        scores = []
-        for u in range(self.cfg.n_prefill_units):
-            aff = entry.n_tokens if (entry and u == owner) else 0
-            scores.append(2.0 * aff - 1e6 * (self._unit_busy[u]
-                                             or bool(self._unit_queue[u])))
-        unit = int(np.argmax(scores))
-        reuse = entry.n_tokens if entry else 0
-        if reuse >= len(r.tokens):          # guarantee >=1 suffix token
-            reuse = 0
-            entry = None
-        deadline = r.arrival + self.cfg.slo_scale * self._ideal_ttft(r, reuse)
-        st = _ReqState(req=r, unit=unit, entry=entry, reuse=reuse,
-                       deadline=deadline)
-        self._req[r.rid] = st
-        if self._unit_busy[unit]:
-            self._unit_queue[unit].append(r)
-            st.queued = True
-            return
-        self._start_prefill(st)
-
-    def _start_prefill(self, st: "_ReqState") -> None:
-        r, unit = st.req, st.unit
-        self._unit_busy[unit] = True
-        st.queued = False
-        if st.entry is not None and st.entry.owner_unit != unit:
-            # Stage 1: fetch the reused prefix from its owner unit
-            f = Flow(fid=new_flow_id(), rid=r.rid, unit=unit,
-                     stage=Stage.KV_REUSE, size=float(st.entry.bytes),
-                     src=self._endpoint(st.entry.owner_unit),
-                     dst=self._endpoint(unit),
-                     target_layer=0, n_layers=self.model.cfg.n_layers)
-            st.stage1 = f
-            self._submit(f)
-            self._resched(("submit",))
-            return                          # compute starts on completion
-        self._begin_compute(st)
-
-    def _begin_compute(self, st: "_ReqState") -> None:
-        r = st.req
-        prefix_cache = None
-        if st.entry is not None:
-            prefix_cache = self.index.fetch(st.entry)
-        # REAL compute (the result is exact; the latency is the target HW's)
-        first, cache, _ = self.engines[st.unit].prefill(
-            r.tokens, prefix_cache=prefix_cache, prefix_len=st.reuse,
-            extra=r.extra)
-        st.first_token = first
-        st.cache = cache
-        st.compute_started = self.evq.now
-        self._unit_lcurr[st.unit] = 0
-        self._schedule_group(st, 0)
-
-    def _schedule_group(self, st: "_ReqState", g: int) -> None:
-        n_new = max(1, len(st.req.tokens) - st.reuse)
-        ctx = st.reuse + n_new / 2.0
-        dt = self._group_time(n_new, ctx, g)
-        self.evq.push(self.evq.now + dt, "group_done", (st.req.rid, g))
-
-    def _on_group_done(self, rid: int, g: int) -> None:
-        st = self._req[rid]
-        G = len(self._groups)
-        self._unit_lcurr[st.unit] = self._groups[g][-1] + 1
-        # Stage 2: EP collective of this group (gates the next group)
-        s2 = self._stage2_bytes(max(1, len(st.req.tokens) - st.reuse), g)
-        if s2 > 0 and self.cfg.gpus_per_unit > 1:
-            co = Coflow(cid=new_flow_id(), rid=rid, unit=st.unit,
-                        stage=Stage.COLLECTIVE, layer=self._groups[g][-1])
-            geps = [self._endpoint(st.unit, i)
-                    for i in range(self.cfg.gpus_per_unit)]
-            for i in geps:
-                for j in geps:
-                    if i == j:
-                        continue
-                    f = Flow(fid=new_flow_id(), rid=rid, unit=st.unit,
-                             stage=Stage.COLLECTIVE,
-                             size=s2 / max(1, len(geps) - 1),
-                             src=i, dst=j, target_layer=self._groups[g][-1],
-                             n_layers=self.model.cfg.n_layers)
-                    f.coflow = co.cid
-                    co.flows.append(f)
-                    self._submit(f)
-            st.pending_s2[g] = co
-        # Stage 3: this group's P2D KV, explicit TTFT deadline
-        kvb = len(st.req.tokens) * self._kv_bytes_per_token(self._groups[g])
-        if kvb > 0:
-            f = Flow(fid=new_flow_id(), rid=rid, unit=st.unit,
-                     stage=Stage.P2D, size=kvb,
-                     src=self._endpoint(st.unit), dst=self._decode_ep,
-                     target_layer=self._groups[g][-1],
-                     n_layers=self.model.cfg.n_layers,
-                     deadline=st.deadline)
-            st.p2d_pending.add(f.fid)
-            self._submit(f)
-        st.groups_done = g + 1
-        self._resched(("layer", st.unit))
-        if g + 1 < G:
-            if st.pending_s2.get(g) is not None:
-                st.waiting_group = g + 1      # gated on Stage-2 completion
-            else:
-                self._schedule_group(st, g + 1)
-        else:
-            st.compute_finished = True
-            self._maybe_finish(st)
-
-    def _on_flow_done(self, f: Flow) -> None:
-        st = self._req.get(f.rid)
-        if st is None:
-            return
-        if st.stage1 is not None and f.fid == st.stage1.fid:
-            st.stage1 = None
-            self._begin_compute(st)
-        elif f.stage == Stage.COLLECTIVE:
-            for g, co in list(st.pending_s2.items()):
-                if co is not None and co.done():
-                    co.finished = self.evq.now
-                    st.pending_s2[g] = None
-                    if st.waiting_group == g + 1:
-                        w = st.waiting_group
-                        st.waiting_group = None
-                        self._schedule_group(st, w)
-        elif f.stage == Stage.P2D:
-            st.p2d_pending.discard(f.fid)
-            self._maybe_finish(st)
-
-    def _maybe_finish(self, st: "_ReqState") -> None:
-        if not st.compute_finished or st.p2d_pending or st.finished:
-            return
-        st.finished = True
-        r = st.req
-        ttft = self.evq.now - r.arrival
-        res = ServeResult(rid=r.rid, ttft=ttft, deadline=st.deadline,
-                          met_slo=(r.arrival + ttft) <= st.deadline,
-                          first_token=st.first_token,
-                          tokens=[st.first_token], reused_tokens=st.reuse,
-                          unit=st.unit)
-        self.results[r.rid] = res
-        # register the prefix for future reuse + hand off to the decode unit
-        if cache_has_state(st.cache):
-            self.index.insert_snapshot(r.tokens, st.cache, st.unit)
-        else:
-            try:
-                pages = self.store.put(st.cache, len(r.tokens))
-                self.index.insert_paged(
-                    r.tokens, pages, st.unit,
-                    self._kv_bytes_per_token(range(self.model.cfg.n_layers)))
-                self.store.release(pages)   # index holds its own references
-            except MemoryError:
-                pass                         # pool full: skip registration
-        if self.decoder.n_active < self.cfg.decode_slots:
-            self.decoder.add(r.rid, st.cache, len(r.tokens), st.first_token,
-                             max_new=r.max_new)
-        st.cache = None
-        # free the unit, start the next queued request
-        self._unit_busy[st.unit] = False
-        if self._unit_queue[st.unit]:
-            nxt = self._unit_queue[st.unit].pop(0)
-            self._start_prefill(self._req[nxt.rid])
-
-
-@dataclass
-class _ReqState:
-    req: ServeRequest
-    unit: int
-    entry: Any
-    reuse: int
-    deadline: float
-    queued: bool = False
-    stage1: Optional[Flow] = None
-    cache: Any = None
-    first_token: int = -1
-    compute_started: float = -1.0
-    compute_finished: bool = False
-    finished: bool = False
-    groups_done: int = 0
-    waiting_group: Optional[int] = None
-    pending_s2: Dict[int, Optional[Coflow]] = field(default_factory=dict)
-    p2d_pending: set = field(default_factory=set)
-
-
-class _View:
-    """SchedView implementation over the orchestrator state."""
-
-    def __init__(self, srv: DisaggServer):
-        self._s = srv
-
-    @property
-    def now(self) -> float:
-        return self._s.evq.now
-
-    def bottleneck(self, flow: Flow) -> Tuple[float, float]:
-        return self._s.net.bottleneck(flow)
-
-    def mlu_inputs(self, flow: Flow, level: int) -> Tuple[float, float]:
-        def protected(o: Flow) -> bool:
-            if o.stage != Stage.P2D:
-                return True
-            return o.level < level
-        return self._s.net.bottleneck_protected(flow, protected)
-
-    def l_curr(self, unit: int) -> int:
-        return self._s._unit_lcurr[unit]
-
-    def computing(self, rid: int) -> bool:
-        st = self._s._req.get(rid)
-        return st is not None and not st.compute_finished
-
-    def red_rank(self, rid: int) -> int:
-        return 0     # single-batch units: RED ordering degenerates
-
-    def downstream_estimate(self, flow: Flow) -> float:
-        return 0.0

@@ -1,62 +1,41 @@
 """ClusterSim — event-driven disaggregated-serving simulator (Vidur+flowsim).
 
-One event queue carries request arrivals, per-(super)layer computation
-completions, fluid-model flow completions and periodic promotion ticks, so
-computation and network interact exactly as in the paper's methodology
-(§6.1: "both computation events and network events are processed within a
-single event queue").
+Thin host over the shared MsFlow runtime (``repro.core.runtime``): the
+event loop, stage emission (per-layer-group Stage-1 KV-reuse flows, Stage-2
+ep/sp/tp coflows, Stage-3 P2D with deadline derivation), SLO calibration
+and the SchedView handed to policies all live in the runtime and are shared
+verbatim with the real-JAX serving path (``repro.serving.disagg``). This
+module contributes only what is simulation-specific:
+
+  * cluster sizing — units, parallelism spec, ToR / fat-tree topology,
+    decode-endpoint pool;
+  * KV-affinity routing over synthetic prefix ids (Zipf traces);
+  * metrics collection into :class:`SimMetrics`.
 
 A *prefill unit* hosts one model replica on ``gpus_per_unit`` endpoints with
-one of three parallelism modes:
-
-  * ``ep`` — attention is request-level data parallel across EP ranks; every
-    MoE layer issues a dispatch+combine all-to-all (Stage 2), NIC-aggregated
-    into one fat flow per (source endpoint, destination server);
-  * ``sp`` — the whole batch is sequence-sharded; every layer ring-exchanges
-    KV shards between neighbouring SP ranks (Stage 2), striped across each
-    rank's TP endpoints;
-  * ``tp`` — collectives stay on the scale-up fabric (§7: TP does not contend
-    for inter-node bandwidth); Stages 1/3 still traverse the network.
-
-Per batch and super-layer g the unit: (wait for Stage-1 flows targeting
-groups <= g) -> compute C_g -> emit Stage-3 P2D flows for g (+ Stage-2
-coflow, which must finish before group g+1 computes). Reused prefix tokens
-skip computation but their KV must arrive (Stage 1) before the consuming
-layer group runs — late arrivals stall the GPU, which is precisely the
-contention -> TTFT coupling the paper measures.
+one of three parallelism modes (``ep`` — request-level DP attention + MoE
+all-to-all; ``sp`` — sequence-sharded ring KV exchange; ``tp`` — scale-up
+collectives only, §7), exactly as described in the stage-emission layer.
 """
 from __future__ import annotations
 
-import itertools
 import math
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from dataclasses import dataclass
+from typing import List, Sequence
 
 import numpy as np
 
 from ..configs.base import ArchConfig
-from ..core import (
-    BatchLoad, Coflow, Flow, FlowState, MFSScheduler, Policy, Stage,
-    inter_request_schedule, new_flow_id,
-)
+from ..core import Coflow, Policy
+from ..core.runtime import MsFlowRuntime, RuntimeHost
+from ..core.stages import (BatchState, GroupPlan, ParallelismSpec,
+                           PrefillItem, StageEmitter, StageProfile)
 from ..netsim import EventQueue, FatTree, FluidNet, SingleToR, Topology
 from .hw import HW, A100
 from .metrics import CoflowRecord, SimMetrics
 from .trace import Request
 
 __all__ = ["ParallelismSpec", "ClusterSpec", "ClusterSim"]
-
-
-@dataclass(frozen=True)
-class ParallelismSpec:
-    mode: str = "ep"        # ep | sp | tp
-    tp: int = 1
-    ep: int = 1
-    sp: int = 1
-
-    @property
-    def gpus(self) -> int:
-        return self.tp * max(self.ep, 1) * max(self.sp, 1)
 
 
 @dataclass
@@ -86,80 +65,13 @@ class ClusterSpec:
         return max(1, min(L, 16 if L >= 16 else L))
 
 
-@dataclass
-class _BatchState:
-    bid: int
-    unit: int
-    requests: List[Request]
-    group_time: List[float]            # compute seconds per super-layer group
-    started: float = 0.0
-    cur_group: int = 0
-    phase: str = "wait_s1"             # wait_s1 | compute | wait_coll | drain
-    stall_begin: Optional[float] = None
-    s1_pending: Dict[int, Set[int]] = field(default_factory=dict)  # group -> fids
-    coll: Optional[Coflow] = None
-    coll_started: float = 0.0
-    p2d_pending: Dict[int, Set[int]] = field(default_factory=dict)  # rid -> fids
-    recompute_extra: float = 0.0       # legacy aggregate (kept for estimates)
-    recomputed: Set[Tuple[int, int]] = field(default_factory=set)   # (rid, group)
-    compute_done_at: Optional[float] = None
-
-
-class _View:
-    """SchedView implementation handed to policies."""
-
-    def __init__(self, sim: "ClusterSim"):
-        self.sim = sim
-
-    @property
-    def now(self) -> float:
-        return self.sim.net.now
-
-    def bottleneck(self, flow: Flow) -> Tuple[float, float]:
-        return self.sim.net.bottleneck(flow)
-
-    def mlu_inputs(self, flow: Flow, level: int) -> Tuple[float, float]:
-        # Protected = traffic strictly more urgent than this flow would be at
-        # ``level``: anything at a higher level, plus early-stage flows at the
-        # same level (band precedence, §4.5). Early-stage flows at *lower*
-        # levels would be preempted by the promotion, so they don't raise rho.
-        def protected(other: Flow) -> bool:
-            k = other.priority_key
-            return k[0] < level or (k[0] == level and len(k) >= 2 and k[1] == 0)
-        return self.sim.net.bottleneck_protected(flow, protected)
-
-    def l_curr(self, unit: int) -> int:
-        b = self.sim.active_batch.get(unit)
-        return b.cur_group if b else 0
-
-    def computing(self, rid: int) -> bool:
-        b = self.sim.batch_of_request.get(rid)
-        return bool(b and b.compute_done_at is None)
-
-    def red_rank(self, rid: int) -> int:
-        return self.sim.red_ranks.get(rid, 0)
-
-    def downstream_estimate(self, flow: Flow) -> float:
-        """Time until the data carried by ``flow`` is actually consumed."""
-        b = self.sim.batch_of_request.get(flow.rid)
-        if b is None or b.compute_done_at is not None:
-            return 0.0
-        if flow.stage == Stage.COLLECTIVE:
-            return 0.0                      # blocks the very next step
-        if flow.stage == Stage.KV_REUSE:    # needed when its group starts
-            return sum(b.group_time[b.cur_group:flow.target_layer])
-        rem = len(b.group_time) - b.cur_group
-        return sum(b.group_time[b.cur_group:]) + b.recompute_extra * rem
-
-
-class ClusterSim:
+class ClusterSim(RuntimeHost):
     def __init__(self, spec: ClusterSpec, policy: Policy, seed: int = 0,
                  contention_free: bool = False):
         self.spec = spec
         self.policy = policy
         policy.reset()
         self.rng = np.random.default_rng(seed)
-        self.contention_free = contention_free
 
         par = spec.par
         n_prefill = spec.n_units * par.gpus
@@ -176,547 +88,91 @@ class ClusterSim:
                                 nic_bw=spec.hw.nic_bw,
                                 gpus_per_server=spec.gpus_per_server,
                                 scaleup_bw=spec.hw.scaleup_bw)
-        self.net = FluidNet(self.topo)
-        self.evq = EventQueue()
-        self.view = _View(self)
 
-        self.unit_eps: List[List[int]] = [
-            list(range(u * par.gpus, (u + 1) * par.gpus))
-            for u in range(spec.n_units)]
-        self.decode_eps = list(range(n_prefill, total))
-
-        # --- per-unit serving state ---
-        self.queues: List[List[Request]] = [[] for _ in range(spec.n_units)]
-        self.active_batch: Dict[int, _BatchState] = {}
-        self.batch_of_request: Dict[int, _BatchState] = {}
-        self.backlog_tokens = [0.0] * spec.n_units
-        self._bid = itertools.count()
-        self._decode_rr = 0
-
-        # --- scheduler state ---
-        self.flows: Dict[int, Flow] = {}
-        self.red_ranks: Dict[int, int] = {}
-        self.pruned_rids: Set[int] = set()
+        plan = GroupPlan.build(spec.model.n_layers, spec.n_groups())
+        self.profile = StageProfile(
+            model=spec.model, hw=spec.hw, par=par, plan=plan,
+            kv_dtype_bytes=spec.kv_dtype_bytes,
+            act_dtype_bytes=spec.act_dtype_bytes,
+            gpus_per_server=spec.gpus_per_server)
+        unit_eps = [list(range(u * par.gpus, (u + 1) * par.gpus))
+                    for u in range(spec.n_units)]
+        decode_eps = list(range(n_prefill, total))
+        emitter = StageEmitter(self.profile, unit_eps, decode_eps, self.topo)
+        self.runtime = MsFlowRuntime(
+            self.topo, FluidNet(self.topo), EventQueue(), policy,
+            self.profile, emitter, host=self, n_units=spec.n_units,
+            max_batch_tokens=spec.max_batch_tokens, slo_scale=spec.slo_scale,
+            slo_mode=spec.slo_mode, tick_interval=spec.tick_interval,
+            drop_budget=spec.drop_budget, contention_free=contention_free)
         self.metrics = SimMetrics(policy=policy.name)
-        self._epoch = 0
-        self._slo_budget: Optional[float] = None
-        self._tick_armed = False
-        self._G = spec.n_groups()
-        self._layers_per_group = self._lpg()
-        self._t_first_decode = self._first_decode_time()
 
-    # ------------------------------------------------------------ model math
-    def _lpg(self) -> List[List[int]]:
-        L, G = self.spec.model.n_layers, self._G
-        bounds = np.linspace(0, L, G + 1).astype(int)
-        return [list(range(bounds[g], bounds[g + 1])) for g in range(G)]
+    # kept as properties so tooling (and tests) can poke at the shared state
+    @property
+    def net(self) -> FluidNet:
+        return self.runtime.net
 
-    def _kv_bytes_group(self, g: int) -> float:
-        m, b = self.spec.model, self.spec.kv_dtype_bytes
-        return sum(m.kv_bytes_per_token_layer(b, l) for l in self._layers_per_group[g])
+    @property
+    def view(self):
+        return self.runtime.view
 
-    def _group_compute_time(self, requests: Sequence[Request], g: int) -> float:
-        """Analytic compute latency of one super-layer group for a batch."""
-        m, hw, par = self.spec.model, self.spec.hw, self.spec.par
-        L = m.n_layers
-        flops = 0.0
-        for r in requests:
-            new = max(1, r.prompt_len - r.reuse_len)
-            ctx = r.reuse_len + new / 2.0
-            flops += new * m.flops_per_token(ctx) / L * len(self._layers_per_group[g])
-        return flops / (par.gpus * hw.flops * hw.mfu)
-
-    def _first_decode_time(self) -> float:
-        m, hw, par = self.spec.model, self.spec.hw, self.spec.par
-        return 2.0 * m.params_active() / (par.gpus * hw.flops * hw.mfu * 0.3)
-
-    def _stage2_volume_per_ep(self, tokens: float, g: int) -> float:
-        """Bytes leaving ONE endpoint for group g's collectives (network)."""
-        m, par, d = self.spec.model, self.spec.par, self.spec.act_dtype_bytes
-        nlayers = len(self._layers_per_group[g])
-        if par.mode == "ep":
-            moe_layers = sum(1 for l in self._layers_per_group[g] if m.is_moe_layer(l))
-            per_layer = 2.0 * (tokens / par.ep) * m.top_k * m.d_model * d
-            return per_layer * moe_layers    # cross-fabric share applied by caller
-        if par.mode == "sp":
-            vol = 0.0
-            for l in self._layers_per_group[g]:
-                kvb = m.kv_bytes_per_token_layer(self.spec.act_dtype_bytes, l)
-                vol += (par.sp - 1) * (tokens / par.sp) * kvb
-            return vol / par.tp              # striped across TP endpoints
-        # tp: 2 all-reduce per layer, ring cost, scale-up only
-        return 2.0 * 2.0 * (par.tp - 1) / par.tp * tokens * m.d_model * d * nlayers / par.tp
-
-    # ----------------------------------------------------------- ideal TTFT
-    def _ideal_ttft(self, r: Request) -> float:
-        """Low-load (contention-free) TTFT for SLO calibration (§6.1)."""
-        spec, par, hw = self.spec, self.spec.par, self.spec.hw
-        total = 0.0
-        for g in range(self._G):
-            total += self._group_compute_time([r], g)
-            if par.mode == "ep":
-                eps_per_server = min(spec.gpus_per_server, par.gpus)
-                cross = 1.0 - eps_per_server / max(par.gpus, 1)
-                v = self._stage2_volume_per_ep(r.prompt_len - r.reuse_len, g) * cross
-                total += v / hw.nic_bw
-            elif par.mode == "sp":
-                v = self._stage2_volume_per_ep(r.prompt_len, g)
-                total += v / hw.nic_bw
-        # stage-1 of group 0 cannot be hidden even without contention
-        if r.reuse_len:
-            total += r.reuse_len * self._kv_bytes_group(0) / hw.nic_bw
-        # last group's P2D is never overlapped with compute
-        total += r.prompt_len * self._kv_bytes_group(self._G - 1) / hw.nic_bw
-        return total + self._t_first_decode
-
-    # ------------------------------------------------------------- plumbing
-    def _submit(self, flow: Flow) -> None:
-        flow.created = self.net.now
-        self.flows[flow.fid] = flow
-        self.net.add(flow)
-        if flow.rid in self.pruned_rids and flow.stage != Stage.COLLECTIVE:
-            flow.state = FlowState.PRUNED
-        self.policy.on_flow_submitted(flow, self.view)
-
-    def _resched(self, trigger: Tuple = ("event",)) -> None:
-        active = list(self.net.flows.values())
-        self.policy.assign(active, self.view, trigger)
-        if self.contention_free:
-            for f in active:
-                route = self.net.routes[f.fid]
-                f.rate = min((self.topo.capacity[l] for l in route), default=2e12)
-            self.net._link_rate = {}
-        else:
-            self.net.reallocate()
-        self._epoch += 1
-        nxt = self.net.next_completion()
-        if nxt is not None:
-            self.evq.push(nxt[0], "net", None, epoch=self._epoch)
-
-    # ---------------------------------------------------------- unit driver
+    # ------------------------------------------------------------ host hooks
     def _owner_unit(self, prefix_id: int) -> int:
         return prefix_id % self.spec.n_units
 
-    def _route_request(self, r: Request) -> int:
-        owner = self._owner_unit(r.prefix_id)
+    def route(self, item: PrefillItem) -> int:
+        owner = item.owner_unit
         best, best_score = 0, -math.inf
         for u in range(self.spec.n_units):
-            aff = r.reuse_len if u == owner else 0
-            score = 2.0 * aff - self.backlog_tokens[u]
+            aff = item.reuse if u == owner else 0
+            score = 2.0 * aff - self.runtime.backlog_tokens[u]
             if score > best_score:
                 best, best_score = u, score
         return best
 
-    def _maybe_start_batch(self, u: int) -> None:
-        if u in self.active_batch or not self.queues[u]:
-            return
-        spec = self.spec
-        batch: List[Request] = []
-        tokens = 0
-        while self.queues[u]:
-            r = self.queues[u][0]
-            if batch and tokens + r.prompt_len > spec.max_batch_tokens:
-                break
-            batch.append(self.queues[u].pop(0))
-            tokens += r.prompt_len
-        bs = _BatchState(
-            bid=next(self._bid), unit=u, requests=batch,
-            group_time=[self._group_compute_time(batch, g) for g in range(self._G)],
-            started=self.net.now)
-        self.active_batch[u] = bs
-        for i, r in enumerate(batch):
-            r.batch = bs.bid
-            self.batch_of_request[r.rid] = bs
-            bs.p2d_pending[r.rid] = set()
-        self._emit_stage1(bs)
-        if self.policy.uses_inter_request:
-            self._run_inter_request()
-        self._try_start_group(bs)
-        self._resched(("submit",))
-
-    def _rank_endpoint(self, bs: _BatchState, r: Request, g: int) -> int:
-        """Endpoint that owns request ``r``'s activations for group g."""
-        eps = self.unit_eps[bs.unit]
-        par = self.spec.par
-        if par.mode == "ep":
-            idx = bs.requests.index(r) % len(eps)
-            return eps[idx]
-        # sp / tp: stripe across endpoints by group for multi-NIC egress
-        return eps[g % len(eps)]
-
-    def _emit_stage1(self, bs: _BatchState) -> None:
-        spec = self.spec
-        for r in bs.requests:
-            if r.reuse_len <= 0:
-                continue
-            owner = self._owner_unit(r.prefix_id)
-            src_eps = self.unit_eps[owner]
-            for g in range(self._G):
-                size = r.reuse_len * self._kv_bytes_group(g)
-                if size <= 0:
-                    continue
-                if spec.par.mode == "sp":
-                    dsts = [self.unit_eps[bs.unit][(g + i) % len(self.unit_eps[bs.unit])]
-                            for i in range(spec.par.sp)]
-                    sizes = [size / spec.par.sp] * spec.par.sp
-                else:
-                    dsts = [self._rank_endpoint(bs, r, g)]
-                    sizes = [size]
-                for dst, sz in zip(dsts, sizes):
-                    f = Flow(new_flow_id(), r.rid, bs.unit, Stage.KV_REUSE, sz,
-                             src=src_eps[g % len(src_eps)], dst=dst,
-                             target_layer=g, n_layers=self._G)
-                    bs.s1_pending.setdefault(g, set()).add(f.fid)
-                    self._submit(f)
-
-    def _try_start_group(self, bs: _BatchState) -> None:
-        g = bs.cur_group
-        blocking = set()
-        for gg in range(g + 1):
-            for fid in bs.s1_pending.get(gg, ()):  # still outstanding
-                fl = self.flows[fid]
-                # scavenged (pruned) Stage-1 flows do NOT block the batch:
-                # their reuse is abandoned and recomputed instead (§5:
-                # "requests can be pruned ... to suppress communication")
-                if fl.state not in (FlowState.DONE, FlowState.PRUNED):
-                    blocking.add(fid)
-        if blocking:
-            bs.phase = "wait_s1"
-            if bs.stall_begin is None:
-                bs.stall_begin = self.net.now
-            return
-        if bs.stall_begin is not None:
-            dt = self.net.now - bs.stall_begin
-            for r in bs.requests:
-                r.stalls += dt
-            bs.stall_begin = None
-        bs.phase = "compute"
-        dur = bs.group_time[g] + self._recompute_penalty(bs, g)
-        self.evq.push(self.net.now + dur, "compute", (bs.bid, bs.unit, g))
-
-    def _recompute_penalty(self, bs: _BatchState, g: int) -> float:
-        """Compute time to re-derive reused KV that pruning left undelivered.
-
-        Charged once per (request, group), proportional to the undelivered
-        fraction; the stale flow is cancelled to free its bandwidth."""
-        m, hw, par = self.spec.model, self.spec.hw, self.spec.par
-        extra = 0.0
-        for gg in range(g + 1):
-            for fid in list(bs.s1_pending.get(gg, ())):
-                fl = self.flows[fid]
-                if fl.state != FlowState.PRUNED or fl.remaining <= 0:
-                    continue
-                if (fl.rid, gg) in bs.recomputed:
-                    continue
-                bs.recomputed.add((fl.rid, gg))
-                r = next(rr for rr in bs.requests if rr.rid == fl.rid)
-                frac = fl.remaining / max(fl.size, 1e-9)
-                nlayers = len(self._layers_per_group[gg])
-                flops = frac * r.reuse_len * m.flops_per_token(r.reuse_len / 2) \
-                    / m.n_layers * nlayers
-                extra += flops / (par.gpus * hw.flops * hw.mfu)
-                bs.s1_pending[gg].discard(fid)
-                if fid in self.net.flows:
-                    self.net.remove(fl)
-                self.policy.on_flow_completed(fl, self.view)
-        return extra
-
-    def _emit_stage2(self, bs: _BatchState) -> Optional[Coflow]:
-        spec, par = self.spec, self.spec.par
-        g = bs.cur_group
-        tokens = sum(max(1, r.prompt_len - r.reuse_len) for r in bs.requests)
-        eps = self.unit_eps[bs.unit]
-        co = Coflow(cid=new_flow_id(), rid=bs.requests[0].rid, unit=bs.unit,
-                    stage=Stage.COLLECTIVE, layer=g)
-        if par.mode == "ep":
-            vol_per_ep = self._stage2_volume_per_ep(tokens, g)
-            if vol_per_ep <= 0:
-                return None
-            servers: Dict[int, List[int]] = {}
-            for e in eps:
-                servers.setdefault(self.topo.server_of(e), []).append(e)
-            for e in eps:
-                my_srv = self.topo.server_of(e)
-                for srv, members in servers.items():
-                    if srv == my_srv:
-                        continue
-                    dst = members[eps.index(e) % len(members)]
-                    sz = vol_per_ep * len(members) / len(eps)
-                    fl = Flow(new_flow_id(), co.rid, bs.unit, Stage.COLLECTIVE,
-                              sz, src=e, dst=dst, target_layer=g,
-                              n_layers=self._G, )
-                    fl.coflow = co.cid
-                    co.flows.append(fl)
-        elif par.mode == "sp":
-            vol = self._stage2_volume_per_ep(
-                sum(r.prompt_len for r in bs.requests), g)
-            if vol <= 0:
-                return None
-            sp, tp = par.sp, par.tp
-            for rank in range(sp):
-                nxt_rank = (rank + 1) % sp
-                for t in range(tp):
-                    src = eps[rank * tp + t]
-                    dst = eps[nxt_rank * tp + t]
-                    fl = Flow(new_flow_id(), co.rid, bs.unit, Stage.COLLECTIVE,
-                              vol, src=src, dst=dst, target_layer=g,
-                              n_layers=self._G)
-                    fl.coflow = co.cid
-                    co.flows.append(fl)
-        else:   # tp: scale-up all-reduce flows between neighbouring endpoints
-            vol = self._stage2_volume_per_ep(tokens, g)
-            if vol <= 0:
-                return None
-            for i, e in enumerate(eps):
-                dst = eps[(i + 1) % len(eps)]
-                if dst == e:
-                    continue
-                fl = Flow(new_flow_id(), co.rid, bs.unit, Stage.COLLECTIVE,
-                          vol, src=e, dst=dst, target_layer=g, n_layers=self._G)
-                fl.coflow = co.cid
-                co.flows.append(fl)
-        if not co.flows:
-            return None
-        co.started = self.net.now
-        for fl in co.flows:
-            self._submit(fl)
-        return co
-
-    def _emit_stage3(self, bs: _BatchState, g: int) -> None:
-        kvb = self._kv_bytes_group(g)
-        state_b = self.spec.model.state_bytes(self.spec.kv_dtype_bytes) / self._G
-        for r in bs.requests:
-            size = r.prompt_len * kvb + state_b
-            if size <= 0:
-                continue
-            dst = self.decode_eps[(r.rid + g) % len(self.decode_eps)] \
-                if self.decode_eps else self._rank_endpoint(bs, r, g)
-            # Flow-level deadline = TTFT deadline minus remaining downstream
-            # work (the first decode step) — the paper's "global TTFT
-            # materialises into an explicit flow-level bound" (§3.2).
-            f = Flow(new_flow_id(), r.rid, bs.unit, Stage.P2D, size,
-                     src=self._rank_endpoint(bs, r, g), dst=dst,
-                     target_layer=g, n_layers=self._G,
-                     deadline=r.deadline - self._t_first_decode)
-            bs.p2d_pending[r.rid].add(f.fid)
-            self._submit(f)
-
-    # --------------------------------------------------------- event handlers
-    def _on_arrival(self, r: Request) -> None:
-        r.ideal_ttft = self._ideal_ttft(r)
-        if self.spec.slo_mode == "fixed" and self._slo_budget is not None:
-            # §6.1: one workload-level SLO threshold = slo_scale x the mean
-            # low-load TTFT — long-prompt requests are inherently tight.
-            r.deadline = r.arrival + self._slo_budget
-        else:
-            r.deadline = r.arrival + self.spec.slo_scale * r.ideal_ttft
-        u = self._route_request(r)
-        r.unit = u
-        self.queues[u].append(r)
-        self.backlog_tokens[u] += r.prompt_len
+    def on_admitted(self, item: PrefillItem) -> None:
+        r: Request = item.payload
+        r.unit = item.unit
+        r.deadline = item.deadline
+        r.ideal_ttft = item.ideal_ttft
         self.metrics.arrival[r.rid] = r.arrival
         # metrics store the *relative* TTFT budget (deadline - arrival) so it
         # compares directly against the recorded (relative) TTFT
-        self.metrics.deadline[r.rid] = r.deadline - r.arrival
-        self.metrics.ideal_ttft[r.rid] = r.ideal_ttft
-        self._maybe_start_batch(u)
+        self.metrics.deadline[r.rid] = item.deadline - item.arrival
+        self.metrics.ideal_ttft[r.rid] = item.ideal_ttft
 
-    def _on_compute_done(self, bid: int, unit: int, g: int) -> None:
-        bs = self.active_batch.get(unit)
-        if bs is None or bs.bid != bid or bs.cur_group != g or bs.phase != "compute":
-            return   # stale
-        self._emit_stage3(bs, g)
-        co = self._emit_stage2(bs)
-        if co is not None:
-            bs.coll = co
-            bs.coll_started = self.net.now
-            bs.phase = "wait_coll"
-            self._resched(("layer", unit))
-            return
-        self._advance_group(bs)
-        self._resched(("layer", unit))
+    def on_batch_started(self, bs: BatchState) -> None:
+        for it in bs.items:
+            it.payload.batch = bs.bid
 
-    def _advance_group(self, bs: _BatchState) -> None:
-        bs.cur_group += 1
-        bs.coll = None
-        if bs.cur_group >= self._G:
-            bs.compute_done_at = self.net.now
-            for r in bs.requests:
-                r.prefill_done = self.net.now
-                self._maybe_finish_request(r, bs)
-            bs.phase = "drain"
-            del self.active_batch[bs.unit]
-            self.backlog_tokens[bs.unit] = max(
-                0.0, self.backlog_tokens[bs.unit]
-                - sum(r.prompt_len for r in bs.requests))
-            self._arm_tick()
-            if self.policy.uses_inter_request:
-                self._run_inter_request()
-            self._maybe_start_batch(bs.unit)
-        else:
-            self._try_start_group(bs)
+    def on_request_done(self, item: PrefillItem, bs: BatchState) -> None:
+        r: Request = item.payload
+        r.prefill_done = item.prefill_done
+        r.stalls = item.stalls
+        r.ttft = item.ttft
+        self.metrics.ttft[r.rid] = item.ttft
+        self.metrics.stall_time[r.rid] = item.stalls
 
-    def _maybe_finish_request(self, r: Request, bs: _BatchState) -> None:
-        if r.ttft is not None or r.prefill_done is None:
-            return
-        pending = bs.p2d_pending.get(r.rid, set())
-        done_p2d = all(self.flows[f].state == FlowState.DONE for f in pending) \
-            and len(pending) == self._G
-        if done_p2d:
-            last = max((self.flows[f].finished or 0.0) for f in pending) \
-                if pending else r.prefill_done
-            r.ttft = max(r.prefill_done, last) - r.arrival + self._t_first_decode
-            self.metrics.ttft[r.rid] = r.ttft
-            self.metrics.stall_time[r.rid] = r.stalls
-            self.batch_of_request.pop(r.rid, None)
-
-    def _on_flow_done(self, f: Flow) -> None:
-        self.policy.on_flow_completed(f, self.view)
-        bs = self.batch_of_request.get(f.rid)
-        if f.stage == Stage.KV_REUSE:
-            if bs is not None:
-                bs.s1_pending.get(f.target_layer, set()).discard(f.fid)
-                if bs.phase == "wait_s1":
-                    self._try_start_group(bs)
-        elif f.stage == Stage.COLLECTIVE:
-            if bs is not None and bs.coll is not None and f.coflow == bs.coll.cid:
-                if bs.coll.done():
-                    bs.coll.finished = self.net.now
-                    ideal = self._coflow_ideal(bs.coll)
-                    self.metrics.coflows.append(CoflowRecord(
-                        bs.coll.cid, bs.unit, bs.coll.layer, bs.coll.started,
-                        self.net.now, bs.coll.size, ideal))
-                    if bs.phase == "wait_coll":
-                        self._advance_group(bs)
-        else:  # P2D
-            if bs is not None:
-                self._maybe_finish_request(
-                    next(r for r in bs.requests if r.rid == f.rid), bs)
-
-    def _coflow_ideal(self, co: Coflow) -> float:
-        worst = 0.0
-        for f in co.flows:
-            route = self.topo.route(f.src, f.dst, f.fid)
-            cap = min((self.topo.capacity[l] for l in route), default=2e12)
-            worst = max(worst, f.size / cap)
-        return worst
-
-    def _arm_tick(self) -> None:
-        if not self._tick_armed:
-            self._tick_armed = True
-            self.evq.push(self.net.now + self.spec.tick_interval, "tick", None)
-
-    def _on_tick(self) -> None:
-        self._tick_armed = False
-        post = [f for f in self.net.flows.values()
-                if f.stage == Stage.P2D and not self.view.computing(f.rid)]
-        if post:
-            self._resched(("tick",))
-            self._arm_tick()
-
-    # ------------------------------------------------- Algorithm 1 coupling
-    def _run_inter_request(self) -> None:
-        batches: List[BatchLoad] = []
-        n_ports = 2 * self.topo.n_nodes       # NIC up/down links
-        for bs in self.active_batch.values():
-            loads: Dict[int, np.ndarray] = {}
-            deadlines: Dict[int, float] = {}
-            for r in bs.requests:
-                v = np.zeros(n_ports)
-                for fid_set in list(bs.s1_pending.values()):
-                    for fid in fid_set:
-                        fl = self.flows[fid]
-                        if fl.rid != r.rid or fl.state == FlowState.DONE:
-                            continue
-                        for lid in self.topo.route(fl.src, fl.dst, fl.fid):
-                            if lid < n_ports:
-                                v[lid] += fl.remaining
-                rem_kv = r.prompt_len * sum(
-                    self._kv_bytes_group(g) for g in range(bs.cur_group, self._G))
-                ep = self._rank_endpoint(bs, r, bs.cur_group)
-                v[2 * ep] += rem_kv           # future P2D leaves via this NIC
-                loads[r.rid] = v
-                deadlines[r.rid] = r.deadline
-            rem_groups = len(bs.group_time) - bs.cur_group
-            comp = sum(bs.group_time[bs.cur_group:]) + bs.recompute_extra * rem_groups
-            batches.append(BatchLoad(bs.bid, loads, deadlines, comp))
-        if not batches:
-            return
-        port_bw = np.array([self.topo.capacity[l] for l in range(n_ports)])
-        # Algorithm 1 takes a GLOBAL total drop budget; spend it across the
-        # whole run so overload control cannot death-spiral the cluster.
-        budget_left = max(0, self.spec.drop_budget - self.metrics.pruned)
-        sched = inter_request_schedule(batches, port_bw, now=self.net.now,
-                                       drop_budget=budget_left)
-        rank_of_batch = {bid: i for i, bid in enumerate(sched.order)}
-        newly_pruned = {rid for (_, rid) in sched.pruned}
-        for bs in self.active_batch.values():
-            for r in bs.requests:
-                self.red_ranks[r.rid] = rank_of_batch.get(bs.bid, 0)
-        # soft enforcement: demote pruned requests' flows, abandon their reuse
-        for bs in self.active_batch.values():
-            for r in bs.requests:
-                if r.rid in newly_pruned and r.rid not in self.pruned_rids:
-                    self.pruned_rids.add(r.rid)
-                    self.metrics.pruned += 1
-                    self._apply_prune(bs, r)
-        # re-admission: requests no longer in the pruned set
-        for rid in list(self.pruned_rids):
-            if rid not in newly_pruned and rid in self.batch_of_request:
-                self.pruned_rids.discard(rid)
-                for f in self.net.flows.values():
-                    if f.rid == rid and f.state == FlowState.PRUNED:
-                        f.state = FlowState.ACTIVE
-                        if isinstance(self.policy, MFSScheduler):
-                            self.policy.readmit(f, self.view)
-
-    def _apply_prune(self, bs: _BatchState, r: Request) -> None:
-        """Soft enforcement (Appendix B Step 3): demote the request's
-        KV-reuse and P2D flows to the scavenger class. Scavenged Stage-1
-        flows no longer block the batch; whatever has not arrived by the time
-        its layer group runs is recomputed (paid in _recompute_penalty)."""
-        for f in list(self.net.flows.values()):
-            if f.rid != r.rid or f.stage == Stage.COLLECTIVE:
-                continue
-            f.state = FlowState.PRUNED
-            if isinstance(self.policy, MFSScheduler):
-                self.policy.prune(f)
-        if bs.phase == "wait_s1":
-            self._try_start_group(bs)
+    def on_coflow_done(self, bs: BatchState, co: Coflow, ideal: float) -> None:
+        self.metrics.coflows.append(CoflowRecord(
+            co.cid, bs.unit, co.layer, co.started, self.runtime.net.now,
+            co.size, ideal))
 
     # ------------------------------------------------------------------ run
     def run(self, requests: Sequence[Request], max_events: int = 5_000_000) -> SimMetrics:
         import copy
-        if self.spec.slo_mode == "fixed" and requests:
-            low_load = float(np.mean([self._ideal_ttft(r) for r in requests]))
-            self._slo_budget = self.spec.slo_scale * low_load
-        else:
-            self._slo_budget = None
+        items: List[PrefillItem] = []
         for r in requests:
             # Requests carry runtime state; copy so one trace can be replayed
             # across policies/seeds without cross-contamination.
-            self.evq.push(r.arrival, "arr", copy.copy(r))
-        n_ev = 0
-        while self.evq and n_ev < max_events:
-            item = self.evq.pop()
-            if item is None:
-                break
-            t, kind, payload, epoch = item
-            n_ev += 1
-            done = self.net.advance(t)
-            for f in done:
-                self._on_flow_done(f)
-            if kind == "arr":
-                self._on_arrival(payload)
-                self._resched(("submit",))
-            elif kind == "compute":
-                self._on_compute_done(*payload)
-            elif kind == "tick":
-                self._on_tick()
-            elif kind == "net":
-                if done:
-                    self._resched(("event",))
-                elif epoch == self._epoch:
-                    # numerically-stalled prediction; force refresh
-                    self._resched(("event",))
+            r = copy.copy(r)
+            items.append(PrefillItem(
+                rid=r.rid, arrival=r.arrival, n_tokens=r.prompt_len,
+                reuse=r.reuse_len, owner_unit=self._owner_unit(r.prefix_id),
+                payload=r))
+        self.runtime.calibrate_slo(items)
+        for it in items:
+            self.runtime.push_arrival(it)
+        self.runtime.run(max_events=max_events)
+        self.metrics.pruned = self.runtime.n_pruned
         return self.metrics

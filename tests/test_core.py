@@ -4,7 +4,8 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (BatchLoad, Flow, MLUConfig, RMLQ, Stage,
                         geometric_thresholds, inter_request_schedule, mlu,

@@ -1,0 +1,170 @@
+"""Shared-runtime integration: the cluster simulator and the real-JAX
+serving path drive the SAME stage-emission / event-loop code (§5's
+pluggability claim), so a matched single-request, single-unit config must
+produce identical stage traces on both; the full MFS policy surface (RMLQ
+promotion, Algorithm 1 RED + pruning) must run on the serving path."""
+import inspect
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import SMOKES
+from repro.core import Stage, make_policy
+from repro.core.arbiter import MFSScheduler
+from repro.models.lm import build_model
+from repro.serving import DisaggConfig, DisaggServer, ServeRequest
+from repro.serving import disagg as disagg_mod
+from repro.simcluster import sim as sim_mod
+from repro.simcluster.hw import A100, HW
+from repro.simcluster.sim import ClusterSim, ClusterSpec, ParallelismSpec
+from repro.simcluster.trace import Request
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = SMOKES["smollm-360m"]
+    model = build_model(cfg)
+    return cfg, model, model.init(KEY)
+
+
+def _sim_spec(cfg, **kw):
+    kw.setdefault("par", ParallelismSpec(mode="ep", ep=1))
+    kw.setdefault("n_units", 1)
+    kw.setdefault("gpus_per_server", 1)
+    kw.setdefault("layer_groups", 2)
+    kw.setdefault("slo_mode", "per-request")
+    kw.setdefault("hw", A100)
+    return ClusterSpec(model=cfg, **kw)
+
+
+# ------------------------------------------------------------------- parity
+def test_sim_and_serve_emit_identical_stage_traces(smollm):
+    """Matched config, matched request stream: (stage, group, size,
+    deadline) must agree exactly between ClusterSim and DisaggServer —
+    both are the same StageEmitter driven by the same MsFlowRuntime."""
+    cfg, model, params = smollm
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab, size=(32,))
+    suffix = rng.integers(0, cfg.vocab, size=(12,))
+
+    srv = DisaggServer(model, params, cfg=DisaggConfig(
+        n_prefill_units=1, gpus_per_unit=1, layer_groups=2, hw=A100,
+        n_pages=128))
+    srv.runtime.trace_stages = True
+    res = srv.serve([
+        ServeRequest(rid=0, arrival=0.0, tokens=prefix, max_new=1),
+        ServeRequest(rid=1, arrival=0.05,
+                     tokens=np.concatenate([prefix, suffix]), max_new=1),
+    ])
+    assert res[1].reused_tokens == 32      # Stage-1 really exercised
+
+    sim = ClusterSim(_sim_spec(cfg), make_policy("mfs"))
+    sim.runtime.trace_stages = True
+    sim.run([
+        Request(rid=0, arrival=0.0, prompt_len=32, reuse_len=0, prefix_id=0),
+        Request(rid=1, arrival=0.05, prompt_len=44, reuse_len=32, prefix_id=0),
+    ])
+
+    def trace(log, rid):
+        return [(stage, group, size, deadline)
+                for r, stage, group, size, deadline in log if r == rid]
+
+    got = trace(srv.runtime.stage_log, 1)
+    want = trace(sim.runtime.stage_log, 1)
+    assert len(got) == len(want) > 0
+    # per-layer-group Stage 1 (KV reuse) and Stage 3 (P2D) both present
+    assert {s for s, *_ in got} == {Stage.KV_REUSE, Stage.P2D}
+    for (s_a, g_a, sz_a, dl_a), (s_b, g_b, sz_b, dl_b) in zip(got, want):
+        assert (s_a, g_a) == (s_b, g_b)
+        assert sz_a == pytest.approx(sz_b, rel=1e-12)
+        if dl_a is None or dl_b is None:
+            assert dl_a == dl_b
+        else:
+            assert dl_a == pytest.approx(dl_b, rel=1e-12)
+
+
+def test_no_duplicated_orchestration_code():
+    """The hosts must stay thin: no per-host stage emission or SchedView."""
+    for mod in (sim_mod, disagg_mod):
+        src = inspect.getsource(mod)
+        assert "_emit_stage" not in src, mod.__name__
+        assert "class _View" not in src, mod.__name__
+        assert "def downstream_estimate" not in src, mod.__name__
+
+
+# ------------------------------------------- MFS fidelity on the JAX path
+def test_serve_path_runs_rmlq_promotion_and_red(smollm):
+    """Under engineered decode-downlink contention the real-JAX path must
+    exercise the full MFS machinery: RED ranks assigned by Algorithm 1 and
+    at least one P2D flow promoted through the RMLQ (level decreased)."""
+    cfg, model, params = smollm
+    slow_nic = HW("slow", flops=A100.flops, hbm_bw=A100.hbm_bw,
+                  nic_bw=1e6, scaleup_bw=A100.scaleup_bw)
+    srv = DisaggServer(model, params, policy=MFSScheduler(),
+                       cfg=DisaggConfig(n_prefill_units=2, gpus_per_unit=1,
+                                        layer_groups=2, hw=slow_nic,
+                                        slo_scale=10.0, n_pages=256))
+    rng = np.random.default_rng(1)
+    reqs = [ServeRequest(rid=i, arrival=i * 1e-5,
+                         tokens=rng.integers(0, cfg.vocab, size=(64 + 8 * i,)),
+                         max_new=1)
+            for i in range(5)]
+    res = srv.serve(reqs)
+    assert len(res) == 5 and all(r.ttft > 0 for r in res)
+    rt = srv.runtime
+    assert rt.red_ranks, "Algorithm 1 (RED ordering) never ran on serve path"
+    promoted = [fid for fid, lvl0 in rt.submit_level.items()
+                if rt.flows[fid].stage == Stage.P2D
+                and rt.flows[fid].level < lvl0]
+    assert promoted, "no P2D flow was ever promoted through the RMLQ"
+
+
+def test_serve_path_soft_pruning(smollm):
+    """Overloading the admission check must demote (not drop) requests:
+    every request still completes, and the prune counter moves."""
+    cfg, model, params = smollm
+    slow_nic = HW("slow", flops=A100.flops, hbm_bw=A100.hbm_bw,
+                  nic_bw=2e5, scaleup_bw=A100.scaleup_bw)
+    srv = DisaggServer(model, params, policy=MFSScheduler(),
+                       cfg=DisaggConfig(n_prefill_units=2, gpus_per_unit=1,
+                                        layer_groups=2, hw=slow_nic,
+                                        slo_scale=1.0, n_pages=256))
+    rng = np.random.default_rng(2)
+    shared = rng.integers(0, cfg.vocab, size=(32,))
+    reqs = [ServeRequest(rid=i, arrival=i * 1e-4,
+                         tokens=np.concatenate(
+                             [shared, rng.integers(0, cfg.vocab, size=(16,))]),
+                         max_new=1)
+            for i in range(6)]
+    res = srv.serve(reqs)
+    assert len(res) == 6
+    assert all(len(r.tokens) >= 1 for r in res)   # soft: nothing dropped
+    assert srv.runtime.n_pruned > 0
+
+
+# --------------------------------------------------- TTFT-recording fix
+def test_kv_light_group_requests_still_finish(smollm):
+    """Regression: a super-layer group that emits no P2D flow (zero KV
+    bytes) must not leave the request's TTFT unrecorded forever."""
+    cfg, _, _ = smollm
+    sim = ClusterSim(_sim_spec(cfg), make_policy("fs"))
+    orig = sim.profile.kv_bytes_group
+    sim.profile.kv_bytes_group = lambda g: 0.0 if g == 0 else orig(g)
+    m = sim.run([Request(rid=0, arrival=0.0, prompt_len=64, reuse_len=0,
+                         prefix_id=0)])
+    assert m.ttft.get(0) is not None and m.ttft[0] > 0
+
+
+def test_fully_local_p2d_requests_finish(smollm):
+    """Degenerate limit: all groups KV-free (pure-state model slice) —
+    completion must fall back to prefill_done instead of deadlocking."""
+    cfg, _, _ = smollm
+    sim = ClusterSim(_sim_spec(cfg), make_policy("mfs"))
+    sim.profile.kv_bytes_group = lambda g: 0.0
+    m = sim.run([Request(rid=0, arrival=0.0, prompt_len=48, reuse_len=0,
+                         prefix_id=0)])
+    assert m.ttft.get(0) is not None and m.ttft[0] > 0
