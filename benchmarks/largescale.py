@@ -1,0 +1,130 @@
+"""Paper-scale simulation sweep — attainment-vs-rate curves at ≥8 units.
+
+The paper's headline numbers come from "large-scale simulations" beyond the
+8-server testbed; this suite reproduces that regime on the incremental
+fluid-net core: an 8-unit (32 prefill + 32 decode endpoints) fat-tree,
+thousands of requests, all 5 policies, swept across
+
+  * request rate (the attainment curve's falling edge),
+  * arrival process — Poisson vs. 2-state MMPP bursts (``ArrivalSpec``),
+  * a multi-tenant SLO mix (tight/standard/loose classes), reported as
+    per-class attainment.
+
+Emits CSV rows (``largescale.*``) plus ``BENCH_largescale.json`` with the
+full curve data for plotting, and the fluid-net incremental-allocation
+counters (group fills per reallocation) observed during the sweep.
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List
+
+from repro.core import make_policy
+from repro.simcluster.papermodels import PAPER_MODELS
+from repro.simcluster.sim import ClusterSim, ClusterSpec, ParallelismSpec
+from repro.simcluster.trace import (ArrivalSpec, SLO_CLASSES, WORKLOADS,
+                                    generate_trace)
+
+from .common import POLICIES, emit
+
+OUT_JSON = "BENCH_largescale.json"
+
+#: paper-scale cluster: 8 units x 4-GPU EP replicas on a 1:1 fat-tree
+SPEC = dict(model="mixtral-8x7b", n_units=8, gpus_per_server=4,
+            topology="fattree", hosts_per_rack=8, layer_groups=8)
+WORKLOAD = "qwen-conv"
+RATES = (24.0, 48.0, 72.0, 96.0)
+N_REQUESTS = 2000
+WARMUP = 64
+SLO_MIX = {"tight": 0.2, "standard": 0.5, "loose": 0.3}
+
+
+def _spec() -> ClusterSpec:
+    kw = dict(SPEC)
+    model = PAPER_MODELS[kw.pop("model")]
+    return ClusterSpec(model=model, par=ParallelismSpec(mode="ep", ep=4), **kw)
+
+
+def _run_one(policy: str, trace, collect_stats: bool = False) -> Dict:
+    sim = ClusterSim(_spec(), make_policy(policy))
+    t0 = time.time()
+    m = sim.run(trace)
+    s = m.summary()
+    s["wall_s"] = round(time.time() - t0, 2)
+    if collect_stats:
+        st = sim.net.stats
+        s["fluid_stats"] = {k: st[k] for k in
+                            ("reallocs", "group_fills", "groups_seen")}
+        s["fills_per_realloc"] = st["group_fills"] / max(st["reallocs"], 1)
+        s["groups_per_realloc"] = st["groups_seen"] / max(st["reallocs"], 1)
+    # GC invariant: nothing retained after the run (memory is O(active))
+    s["flows_retained"] = len(sim.runtime.flows)
+    return s
+
+
+def _per_class_attainment(metrics_by_rid: Dict, trace) -> Dict[str, float]:
+    ok: Dict[str, List[int]] = {c: [] for c in SLO_CLASSES}
+    for r in trace:
+        if r.rid < 0 or r.rid not in metrics_by_rid["ttft"]:
+            continue
+        met = (metrics_by_rid["ttft"][r.rid]
+               <= metrics_by_rid["deadline"][r.rid] + 1e-9)
+        ok[r.slo_class].append(1 if met else 0)
+    return {c: (sum(v) / len(v) if v else float("nan"))
+            for c, v in ok.items()}
+
+
+def main(quick: bool = False):
+    rows: List[str] = []
+    n = 300 if quick else N_REQUESTS
+    rates = RATES[1:3] if quick else RATES
+    result = {"spec": SPEC, "workload": WORKLOAD, "n_requests": n,
+              "rates": list(rates), "curves": {}, "slo_mix": {}}
+
+    # ---- attainment-vs-rate curves, Poisson and bursty (MMPP) arrivals ----
+    for proc in ("poisson", "mmpp"):
+        arrival = ArrivalSpec(process=proc)
+        curves: Dict[str, List[float]] = {p: [] for p in POLICIES}
+        for rate in rates:
+            trace = generate_trace(WORKLOADS[WORKLOAD], n, rps=rate, seed=0,
+                                   warmup=WARMUP, arrival=arrival)
+            for pol in POLICIES:
+                s = _run_one(pol, trace, collect_stats=(pol == "mfs"))
+                curves[pol].append(s["slo_attainment"])
+                emit(rows, f"largescale.{proc}.{pol}.rps{rate:g}.attainment",
+                     f"{s['slo_attainment']:.4f}",
+                     f"p99={s.get('ttft_p99', float('nan')):.3f}s "
+                     f"wall={s['wall_s']}s")
+                assert s["flows_retained"] == 0, "runtime leaked flow state"
+                if pol == "mfs":
+                    emit(rows,
+                         f"largescale.{proc}.rps{rate:g}.fills_per_realloc",
+                         f"{s['fills_per_realloc']:.3f}",
+                         f"groups_per_realloc={s['groups_per_realloc']:.3f}")
+        result["curves"][proc] = curves
+
+    # ---- multi-tenant SLO classes at the middle rate -----------------------
+    rate = rates[len(rates) // 2]
+    trace = generate_trace(WORKLOADS[WORKLOAD], n, rps=rate, seed=0,
+                           warmup=WARMUP, arrival=ArrivalSpec(process="mmpp"),
+                           slo_mix=SLO_MIX)
+    for pol in POLICIES:
+        sim = ClusterSim(_spec(), make_policy(pol))
+        m = sim.run(trace)
+        by_class = _per_class_attainment(
+            {"ttft": m.ttft, "deadline": m.deadline}, trace)
+        result["slo_mix"][pol] = by_class
+        emit(rows, f"largescale.slomix.{pol}.attainment",
+             "/".join(f"{by_class[c]:.3f}" for c in sorted(SLO_CLASSES)),
+             "classes=" + "/".join(sorted(SLO_CLASSES)))
+
+    with open(OUT_JSON, "w") as fh:
+        json.dump(result, fh, indent=2)
+    emit(rows, "largescale.json", OUT_JSON, f"{n} requests x {len(rates)} rates")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(quick="--quick" in sys.argv)

@@ -1,7 +1,10 @@
 """Fig 6 / Fig 7 / Table 1-2 — the didactic single-link scenarios, measured
 (not asserted): layer-unblock times per policy and the inter-request
-deadline/earliness outcome — plus the FluidNet water-filling microbench
-(per-call reallocate latency across priority-group-size regimes)."""
+deadline/earliness outcome — plus the FluidNet water-filling microbenches:
+``waterfill.{1key,8key,perflow}`` measure a from-scratch reallocate across
+priority-group-size regimes, and ``waterfill.incremental.*`` measure the
+dirty-group incremental path (full group fills per reallocation and
+per-event latency vs. forced full fills) under defer-and-promote churn."""
 from __future__ import annotations
 
 import time
@@ -55,10 +58,68 @@ def _bench_waterfill(rows, n_flows: int = 512, reps: int = 20):
         net.reallocate()                      # warm route cache
         t0 = time.perf_counter()
         for _ in range(reps):
-            net.reallocate()
+            net.reallocate(full=True)         # measure the fill itself, not
+            #                                   the dirty-group cache hit
         ms = (time.perf_counter() - t0) / reps * 1e3
         emit(rows, f"waterfill.{label}.reallocate_ms", f"{ms:.3f}",
              f"{n_flows} flows")
+
+
+def _bench_incremental(rows, n_flows: int = 512, n_bands: int = 8,
+                       n_events: int = 400):
+    """Dirty-group incremental reallocation vs. from-scratch fills under the
+    runtime's real churn pattern: each event completes one flow and admits a
+    replacement, with churn concentrated in the *deferred* (low-priority)
+    bands — defer-and-promote admits new flows low, so urgent bands stay
+    clean and replay their cached allocation. Reports per-event latency
+    (reallocate + next_completion, the per-event fluid-net work) and full
+    group fills per reallocation for both modes; rates are bit-identical
+    (asserted in tests/test_netsim.py)."""
+    def drive(incremental: bool) -> tuple:
+        rng = np.random.default_rng(0)
+        topo = FatTree(racks=8, hosts_per_rack=8, nic_bw=1.0,
+                       gpus_per_server=4, scaleup_bw=4.0)
+        net = FluidNet(topo, incremental=incremental)
+        def mk(i):
+            s, d = rng.integers(0, topo.n_nodes, size=2)
+            f = Flow(new_flow_id(), i, 0, Stage.P2D,
+                     float(rng.uniform(1, 100)), src=int(s), dst=int(d),
+                     target_layer=0, n_layers=8)
+            # geometric skew toward the lowest band (defer-and-promote
+            # admission): band K-1 is hottest, band 0 nearly static
+            band = n_bands - 1 - min(rng.geometric(0.5) - 1, n_bands - 1)
+            f.priority_key = (band,)
+            if rng.uniform() < 0.2:
+                f.rate_cap = float(rng.uniform(0.05, 0.5))
+            return f
+        flows = [mk(i) for i in range(n_flows)]
+        for f in flows:
+            net.add(f)
+        net.reallocate()
+        net.stats = {k: 0 for k in net.stats}
+        t0 = time.perf_counter()
+        for ev in range(n_events):
+            victim = flows.pop(int(rng.integers(len(flows))))
+            net.remove(victim)
+            nf = mk(n_flows + ev)
+            flows.append(nf)
+            net.add(nf)
+            net.reallocate()
+            net.next_completion()
+        ms = (time.perf_counter() - t0) / n_events * 1e3
+        return ms, net.stats["group_fills"] / max(net.stats["reallocs"], 1)
+
+    ms_inc, fills_inc = drive(incremental=True)
+    ms_full, fills_full = drive(incremental=False)
+    emit(rows, "waterfill.incremental.ms_per_event", f"{ms_inc:.3f}",
+         f"{n_flows} flows, {n_bands} bands")
+    emit(rows, "waterfill.incremental.full.ms_per_event", f"{ms_full:.3f}",
+         f"speedup={ms_full / max(ms_inc, 1e-9):.2f}x")
+    emit(rows, "waterfill.incremental.fills_per_realloc", f"{fills_inc:.3f}",
+         f"full={fills_full:.3f}")
+    emit(rows, "waterfill.incremental.fill_ratio",
+         f"{fills_full / max(fills_inc, 1e-9):.2f}",
+         "full fills / incremental fills (>=2x target)")
 
 
 def main(quick: bool = False):
@@ -82,6 +143,7 @@ def main(quick: bool = False):
              "+".join(missed) if missed else "none",
              f"pos_earliness={earliness:.1f}")
     _bench_waterfill(rows, reps=5 if quick else 20)
+    _bench_incremental(rows, n_events=100 if quick else 400)
     return rows
 
 

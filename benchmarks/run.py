@@ -19,6 +19,7 @@ SUITES = [
     ("fig12_sim_sp", "benchmarks.sim_sp"),
     ("fig13_14_breakdown", "benchmarks.breakdown"),
     ("roofline", "benchmarks.roofline"),
+    ("largescale", "benchmarks.largescale"),
 ]
 
 

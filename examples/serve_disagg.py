@@ -73,9 +73,7 @@ def main() -> None:
         slo = sum(r.met_slo for r in res) / len(res)
         reuse = sum(r.reused_tokens for r in res)
         mean_ttft = np.mean([r.ttft for r in res]) * 1e3
-        promoted = sum(1 for fid, lvl0 in rt.submit_level.items()
-                       if rt.flows[fid].stage == Stage.P2D
-                       and rt.flows[fid].level < lvl0)
+        promoted = rt.promoted_count(Stage.P2D)
         print(f"{pol:8s} SLO={slo:6.1%}  mean TTFT={mean_ttft:7.3f} ms  "
               f"reused {reuse:3d} tokens  promoted {promoted:2d} P2D flows  "
               f"pruned {rt.n_pruned} requests")

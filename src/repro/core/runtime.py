@@ -30,7 +30,8 @@ hosts; there are no degenerate per-host stubs.
 from __future__ import annotations
 
 import itertools
-from typing import Dict, List, Optional, Sequence, Set, Tuple
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Set, Tuple
 
 import numpy as np
 
@@ -122,7 +123,7 @@ class MsFlowRuntime:
                  max_batch_tokens: int = 8192, slo_scale: float = 3.0,
                  slo_mode: str = "per-request", tick_interval: float = 2e-3,
                  drop_budget: int = 32, contention_free: bool = False,
-                 trace_stages: bool = False):
+                 trace_stages: bool = False, stage_log_limit: int = 100_000):
         self.topo = topo
         self.net = net
         self.evq = evq
@@ -140,40 +141,46 @@ class MsFlowRuntime:
         self.view = RuntimeView(self)
 
         # --- per-unit serving state ---
-        self.queues: List[List[PrefillItem]] = [[] for _ in range(n_units)]
+        self.queues: List[Deque[PrefillItem]] = [deque() for _ in range(n_units)]
         self.active_batch: Dict[int, BatchState] = {}
         self.batch_of_request: Dict[int, BatchState] = {}
         self.backlog_tokens = [0.0] * n_units
         self._bid = itertools.count()
 
-        # --- scheduler state ---
+        # --- scheduler state (O(active), not O(history): completed flows
+        # and finished requests are evicted so long traces stay bounded) ---
         self.flows: Dict[int, Flow] = {}
         self.red_ranks: Dict[int, int] = {}
         self.pruned_rids: Set[int] = set()     # currently demoted
-        self.ever_pruned: Set[int] = set()     # paid a prune at least once
+        self.ever_pruned: Set[int] = set()     # paid a prune (<= drop budget)
         self.n_pruned = 0
+        self.n_red_runs = 0                    # Algorithm 1 invocations
         self._epoch = 0
-        self._slo_budget: Optional[float] = None
+        self._slo_base: Optional[float] = None  # fixed-mode low-load mean TTFT
         self._tick_armed = False
         self._G = len(profile.plan)
         self._t_first_decode = profile.first_decode_time()
         # optional observability: (rid, stage, group, size, deadline) per
-        # submitted flow + level at submission, consumed by parity tests and
-        # the promotion/pruning reports of examples/serve_disagg.py
+        # submitted flow, consumed by the parity tests and the reports of
+        # examples/serve_disagg.py; bounded so tracing cannot grow O(history)
         self.trace_stages = trace_stages
-        self.stage_log: List[Tuple[int, Stage, int, float, Optional[float]]] = []
-        self.submit_level: Dict[int, int] = {}
+        self.stage_log: Deque[Tuple[int, Stage, int, float, Optional[float]]] \
+            = deque(maxlen=stage_log_limit)
+        self.submit_level: Dict[int, int] = {}   # live flows only
+        self._promoted: Dict[Stage, int] = {}    # evicted flows' promotions
 
     # ---------------------------------------------------------- calibration
     def calibrate_slo(self, items: Sequence[PrefillItem]) -> None:
-        """§6.1: one workload-level SLO threshold = slo_scale x the mean
-        low-load TTFT (``slo_mode="fixed"``). Per-request mode derives each
+        """§6.1: one workload-level SLO base = the mean low-load TTFT
+        (``slo_mode="fixed"``); each request's budget is its own
+        ``slo_scale`` (tight/standard/loose class, falling back to the
+        cluster default) times that base. Per-request mode derives each
         deadline from the request's own ideal at admission time instead."""
         if self.slo_mode == "fixed" and items:
-            low_load = float(np.mean([self.profile.ideal_ttft(i) for i in items]))
-            self._slo_budget = self.slo_scale * low_load
+            self._slo_base = float(np.mean([self.profile.ideal_ttft(i)
+                                            for i in items]))
         else:
-            self._slo_budget = None
+            self._slo_base = None
 
     # ------------------------------------------------------------- plumbing
     def push_arrival(self, item: PrefillItem) -> None:
@@ -197,7 +204,8 @@ class MsFlowRuntime:
         if self.contention_free:
             for f in active:
                 route = self.net.routes[f.fid]
-                f.rate = min((self.topo.capacity[l] for l in route), default=2e12)
+                self.net.set_rate(f, min((self.topo.capacity[l] for l in route),
+                                         default=2e12))
             self.net._link_rate = {}
         else:
             self.net.reallocate()
@@ -216,7 +224,7 @@ class MsFlowRuntime:
             it = self.queues[u][0]
             if batch and tokens + it.n_tokens > self.max_batch_tokens:
                 break
-            batch.append(self.queues[u].pop(0))
+            batch.append(self.queues[u].popleft())
             tokens += it.n_tokens
         bs = BatchState(
             bid=next(self._bid), unit=u, items=batch,
@@ -281,17 +289,41 @@ class MsFlowRuntime:
                 if fid in self.net.flows:
                     self.net.remove(fl)
                 self.policy.on_flow_completed(fl, self.view)
+                self._evict_flow(fl)
         return extra
+
+    # ----------------------------------------------------------- state GC
+    def _evict_flow(self, f: Flow) -> None:
+        """Drop a finished/cancelled flow from runtime state, folding its
+        promotion outcome into the compact per-stage counters first."""
+        self.flows.pop(f.fid, None)
+        lvl0 = self.submit_level.pop(f.fid, None)
+        if lvl0 is not None and f.level < lvl0:
+            self._promoted[f.stage] = self._promoted.get(f.stage, 0) + 1
+
+    def promoted_count(self, stage: Optional[Stage] = None) -> int:
+        """Flows promoted below their submission level (evicted + live)."""
+        n = sum(v for s, v in self._promoted.items()
+                if stage is None or s == stage)
+        for fid, lvl0 in self.submit_level.items():
+            f = self.flows.get(fid)
+            if f is not None and (stage is None or f.stage == stage) \
+                    and f.level < lvl0:
+                n += 1
+        return n
 
     # --------------------------------------------------------- event handlers
     def _on_arrival(self, item: PrefillItem) -> None:
         u = self.host.route(item)           # may refine reuse / owner_unit
         item.unit = u
         item.ideal_ttft = self.profile.ideal_ttft(item)
-        if self.slo_mode == "fixed" and self._slo_budget is not None:
-            item.deadline = item.arrival + self._slo_budget
+        # per-request SLO class (tight/standard/loose) scales either the
+        # workload-level base (fixed mode) or the request's own ideal
+        scale = item.slo_scale if item.slo_scale > 0 else self.slo_scale
+        if self.slo_mode == "fixed" and self._slo_base is not None:
+            item.deadline = item.arrival + scale * self._slo_base
         else:
-            item.deadline = item.arrival + self.slo_scale * item.ideal_ttft
+            item.deadline = item.arrival + scale * item.ideal_ttft
         self.queues[u].append(item)
         self.backlog_tokens[u] += item.n_tokens
         self.host.on_admitted(item)
@@ -341,15 +373,19 @@ class MsFlowRuntime:
         # Completion requires every *actually emitted* P2D flow to be done.
         # (Counting groups instead would deadlock requests whose KV-light
         # groups emitted no flow at all.) prefill_done is only set after the
-        # last group ran, so the emitted set is final here.
-        pending = bs.p2d_pending.get(item.rid, set())
-        if all(self.flows[f].state == FlowState.DONE for f in pending):
-            last = max((self.flows[f].finished or 0.0) for f in pending) \
-                if pending else item.prefill_done
-            item.ttft = max(item.prefill_done, last) - item.arrival \
-                + self._t_first_decode
-            self.batch_of_request.pop(item.rid, None)
-            self.host.on_request_done(item, bs)
+        # last group ran, so the emitted set is final here. ``p2d_pending``
+        # holds the still-outstanding fids (done flows are discarded as they
+        # complete, with the latest finish time folded into ``p2d_last``) so
+        # this check never needs the evicted flow records.
+        if bs.p2d_pending.get(item.rid):
+            return
+        last = bs.p2d_last.get(item.rid, item.prefill_done)
+        item.ttft = max(item.prefill_done, last) - item.arrival \
+            + self._t_first_decode
+        self.batch_of_request.pop(item.rid, None)
+        self.red_ranks.pop(item.rid, None)
+        self.pruned_rids.discard(item.rid)
+        self.host.on_request_done(item, bs)
 
     def _on_flow_done(self, f: Flow) -> None:
         self.policy.on_flow_completed(f, self.view)
@@ -369,8 +405,15 @@ class MsFlowRuntime:
                         self._advance_group(bs)
         else:  # P2D
             if bs is not None:
+                pend = bs.p2d_pending.get(f.rid)
+                if pend is not None:
+                    pend.discard(f.fid)
+                    if f.finished is not None:
+                        bs.p2d_last[f.rid] = max(
+                            bs.p2d_last.get(f.rid, 0.0), f.finished)
                 self._maybe_finish_request(
                     next(i for i in bs.items if i.rid == f.rid), bs)
+        self._evict_flow(f)
 
     def _coflow_ideal(self, co: Coflow) -> float:
         worst = 0.0
@@ -404,8 +447,9 @@ class MsFlowRuntime:
                 v = np.zeros(n_ports)
                 for fid_set in list(bs.s1_pending.values()):
                     for fid in fid_set:
-                        fl = self.flows[fid]
-                        if fl.rid != it.rid or fl.state == FlowState.DONE:
+                        # pending sets hold live (outstanding/pruned) fids only
+                        fl = self.flows.get(fid)
+                        if fl is None or fl.rid != it.rid:
                             continue
                         for lid in self.topo.route(fl.src, fl.dst, fl.fid):
                             if lid < n_ports:
@@ -422,6 +466,7 @@ class MsFlowRuntime:
             batches.append(BatchLoad(bs.bid, loads, deadlines, comp))
         if not batches:
             return
+        self.n_red_runs += 1
         port_bw = np.array([self.topo.capacity[l] for l in range(n_ports)])
         # Algorithm 1 takes a GLOBAL total drop budget; spend it across the
         # whole run so overload control cannot death-spiral the cluster.

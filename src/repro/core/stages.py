@@ -91,6 +91,8 @@ class PrefillItem:
     n_tokens: int                      # prompt length
     reuse: int = 0                     # reused prefix tokens (Stage 1)
     owner_unit: int = 0                # unit owning the reused prefix
+    slo_scale: float = 0.0             # per-request SLO class scale (0 = use
+    #                                    the cluster-wide default)
     payload: Any = None
     # --- filled by the runtime ---
     unit: int = -1
@@ -116,7 +118,8 @@ class BatchState:
     s1_pending: Dict[int, Set[int]] = field(default_factory=dict)  # group -> fids
     coll: Optional[Coflow] = None
     coll_started: float = 0.0
-    p2d_pending: Dict[int, Set[int]] = field(default_factory=dict)  # rid -> fids
+    p2d_pending: Dict[int, Set[int]] = field(default_factory=dict)  # rid -> outstanding fids
+    p2d_last: Dict[int, float] = field(default_factory=dict)        # rid -> latest P2D finish
     recompute_extra: float = 0.0       # legacy aggregate (kept for estimates)
     recomputed: Set[Tuple[int, int]] = field(default_factory=set)   # (rid, group)
     compute_done_at: Optional[float] = None

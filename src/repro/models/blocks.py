@@ -23,6 +23,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+# ``jax.shard_map`` graduated from jax.experimental in newer releases; fall
+# back to the experimental entry point (same signature) on older installs.
+try:
+    _shard_map = jax.shard_map
+except AttributeError:                                    # jax < 0.6
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from ..configs.base import ArchConfig
 from .layers import (DEFAULT_DTYPE, apply_rope, dense, gqa_attention,
                      init_dense, rmsnorm, rmsnorm_params, rope, swiglu,
@@ -418,12 +425,18 @@ def _moe_local(p, x, cfg: ArchConfig):
     return out.reshape(B, T, D)   # shared experts are added by moe_apply
 
 
+def _one_axis_size(a: str) -> int:
+    if hasattr(jax.lax, "axis_size"):          # jax >= 0.6
+        return jax.lax.axis_size(a)
+    return jax.lax.psum(1, a)                  # classic spelling
+
+
 def _axis_size(axis) -> int:
     if isinstance(axis, str):
-        return jax.lax.axis_size(axis)
+        return _one_axis_size(axis)
     n = 1
     for a in axis:
-        n *= jax.lax.axis_size(a)
+        n *= _one_axis_size(a)
     return n
 
 
@@ -433,7 +446,7 @@ def _axis_index(axis):
         return jax.lax.axis_index(axis)
     idx = 0
     for a in axis:
-        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        idx = idx * _one_axis_size(a) + jax.lax.axis_index(a)
     return idx
 
 
@@ -513,7 +526,7 @@ def moe_apply(p, x, *, cfg: ArchConfig, ctx: ShardCtx,
                                capacity_factor=capacity_factor)
             return out.reshape(xl.shape)
 
-        mapped = jax.shard_map(
+        mapped = _shard_map(
             body, mesh=ctx.mesh,
             in_specs=(P(batch, ctx.model_axis, None),
                       P(), expert_spec, expert_spec, expert_spec),
@@ -552,7 +565,7 @@ def moe_apply(p, x, *, cfg: ArchConfig, ctx: ShardCtx,
             out = jax.lax.psum(out, ctx.ep_axes)            # Stage-2 combine
             return out.reshape(xl.shape)
 
-        mapped = jax.shard_map(
+        mapped = _shard_map(
             body_dec, mesh=ctx.mesh,
             in_specs=(P(dec_batch, None, None),
                       P(), expert_spec, expert_spec, expert_spec),

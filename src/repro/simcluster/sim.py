@@ -169,7 +169,7 @@ class ClusterSim(RuntimeHost):
             items.append(PrefillItem(
                 rid=r.rid, arrival=r.arrival, n_tokens=r.prompt_len,
                 reuse=r.reuse_len, owner_unit=self._owner_unit(r.prefix_id),
-                payload=r))
+                slo_scale=getattr(r, "slo_scale", 0.0), payload=r))
         self.runtime.calibrate_slo(items)
         for it in items:
             self.runtime.push_arrival(it)

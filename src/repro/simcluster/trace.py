@@ -10,16 +10,36 @@ Statistical shape follows the paper's descriptions:
 
 Prompt lengths are lognormal (heavy upper tail — the paper's "small fraction
 of tail requests necessitating large KV movements"); prefix popularity is
-Zipf so hot blocks concentrate on victim units; arrivals are Poisson.
+Zipf so hot blocks concentrate on victim units.
+
+Arrival processes (``ArrivalSpec``) extend the paper's Poisson default to the
+regimes related work sweeps (SLOs-Serve's multi-SLO workloads, Ascendra's
+dynamic-load prioritisation):
+
+  * ``poisson`` — memoryless, CV = 1 (the paper's large-scale sims);
+  * ``gamma``   — i.i.d. Gamma inter-arrivals with a chosen CV > 1
+                  (heavy-tailed gaps: clustered arrivals + lulls);
+  * ``mmpp``    — 2-state Markov-modulated Poisson process: a quiet state
+                  and a burst state whose rate is ``burst_factor``x higher,
+                  occupied ``burst_frac`` of the time, with exponentially
+                  distributed dwell times (mean episode cycle ``dwell``
+                  seconds). Mean rate stays ``rps`` so attainment-vs-rate
+                  curves remain comparable across processes.
+
+Multi-tenant SLO classes: an ``slo_mix`` maps class names (``tight`` /
+``standard`` / ``loose``, see ``SLO_CLASSES``) to probabilities; sampled
+per request and carried as ``Request.slo_scale``, which the runtime uses in
+place of the cluster-wide ``slo_scale`` when deriving the TTFT deadline.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
-__all__ = ["Request", "WorkloadSpec", "WORKLOADS", "generate_trace"]
+__all__ = ["Request", "WorkloadSpec", "ArrivalSpec", "WORKLOADS",
+           "SLO_CLASSES", "generate_trace"]
 
 
 @dataclass
@@ -29,6 +49,9 @@ class Request:
     prompt_len: int
     reuse_len: int
     prefix_id: int
+    # multi-tenant SLO class (0.0 = defer to the cluster-wide slo_scale)
+    slo_class: str = "standard"
+    slo_scale: float = 0.0
     # filled by the simulator:
     deadline: float = 0.0
     unit: int = -1
@@ -51,6 +74,21 @@ class WorkloadSpec:
     max_prompt: int = 0        # 0 = 8x mean
 
 
+@dataclass(frozen=True)
+class ArrivalSpec:
+    """Arrival-process shape at a fixed mean rate (``rps`` stays the knob)."""
+
+    process: str = "poisson"   # poisson | gamma | mmpp
+    cv: float = 2.0            # gamma: inter-arrival coefficient of variation
+    burst_factor: float = 8.0  # mmpp: burst-state rate / quiet-state rate
+    burst_frac: float = 0.1    # mmpp: long-run fraction of time in burst
+    dwell: float = 4.0         # mmpp: mean seconds per quiet+burst cycle
+
+
+#: per-request SLO budget multipliers over the calibration base (tenant mix)
+SLO_CLASSES: Dict[str, float] = {"tight": 1.5, "standard": 3.0, "loose": 6.0}
+
+
 WORKLOADS = {
     "qwen-conv": WorkloadSpec("qwen-conv", mean_prompt=2048, reuse_mean=0.50,
                               zipf_a=1.1),
@@ -64,18 +102,72 @@ WORKLOADS = {
 }
 
 
+# ------------------------------------------------------------ arrival draws
+def _gaps_poisson(rng: np.random.Generator, rps: float, n: int) -> np.ndarray:
+    return rng.exponential(1.0 / rps, size=n)
+
+
+def _gaps_gamma(rng: np.random.Generator, rps: float, n: int,
+                cv: float) -> np.ndarray:
+    """Gamma inter-arrivals: shape k = 1/cv^2 keeps the mean at 1/rps while
+    setting the coefficient of variation to ``cv`` (cv=1 == Poisson)."""
+    k = 1.0 / (cv * cv)
+    return rng.gamma(shape=k, scale=1.0 / (rps * k), size=n)
+
+
+def _arrivals_mmpp(rng: np.random.Generator, rps: float, n: int,
+                   spec: ArrivalSpec) -> np.ndarray:
+    """2-state MMPP arrivals. Quiet rate r0 and burst rate f*r0 are solved
+    from the long-run mean ``rps = (1-p)*r0 + p*f*r0`` so burstiness is a
+    pure *shape* change; state dwell times are exponential with means
+    ``dwell*(1-p)`` (quiet) and ``dwell*p`` (burst)."""
+    p, f = spec.burst_frac, spec.burst_factor
+    r0 = rps / (1.0 - p + p * f)
+    rates = (r0, f * r0)
+    dwells = (max(spec.dwell * (1.0 - p), 1e-9), max(spec.dwell * p, 1e-9))
+    out = np.empty(n)
+    t, i = 0.0, 0
+    state = 0                                  # start quiet
+    state_end = rng.exponential(dwells[state])
+    while i < n:
+        gap = rng.exponential(1.0 / rates[state])
+        if t + gap < state_end:
+            t += gap
+            out[i] = t
+            i += 1
+        else:                                  # switch state, keep the clock
+            t = state_end
+            state = 1 - state
+            state_end = t + rng.exponential(dwells[state])
+    return out
+
+
 def generate_trace(spec: WorkloadSpec, n_requests: int, rps: float,
-                   seed: int = 0, warmup: int = 0) -> List[Request]:
-    """Poisson arrivals at ``rps`` requests/second, ``n_requests`` total.
+                   seed: int = 0, warmup: int = 0,
+                   arrival: Optional[ArrivalSpec] = None,
+                   slo_mix: Optional[Dict[str, float]] = None) -> List[Request]:
+    """``n_requests`` requests at mean rate ``rps`` requests/second.
 
     ``warmup`` extra leading requests are generated and flagged by negative
     rid so callers can exclude them from metrics (the paper clips the first
     512 trace entries as warm-up).
+
+    ``arrival`` selects the arrival process (default Poisson — identical
+    draws to the historical generator, so fixed seeds reproduce old traces).
+    ``slo_mix`` maps SLO class names from :data:`SLO_CLASSES` to sampling
+    probabilities; ``None`` leaves every request on the cluster default.
     """
     rng = np.random.default_rng(seed)
     total = n_requests + warmup
-    gaps = rng.exponential(1.0 / rps, size=total)
-    arrivals = np.cumsum(gaps)
+    arrival = arrival or ArrivalSpec()
+    if arrival.process == "poisson":
+        arrivals = np.cumsum(_gaps_poisson(rng, rps, total))
+    elif arrival.process == "gamma":
+        arrivals = np.cumsum(_gaps_gamma(rng, rps, total, arrival.cv))
+    elif arrival.process == "mmpp":
+        arrivals = _arrivals_mmpp(rng, rps, total, arrival)
+    else:
+        raise ValueError(f"unknown arrival process {arrival.process!r}")
     mu = np.log(spec.mean_prompt) - spec.sigma ** 2 / 2.0
     lengths = rng.lognormal(mu, spec.sigma, size=total)
     cap = spec.max_prompt or 8 * spec.mean_prompt
@@ -88,15 +180,29 @@ def generate_trace(spec: WorkloadSpec, n_requests: int, rps: float,
     pmf = ranks ** (-spec.zipf_a)
     pmf /= pmf.sum()
     prefixes = rng.choice(spec.n_prefixes, size=total, p=pmf)
+    if slo_mix:
+        unknown = set(slo_mix) - set(SLO_CLASSES)
+        if unknown:
+            raise ValueError(f"unknown SLO classes {sorted(unknown)}; "
+                             f"choose from {sorted(SLO_CLASSES)}")
+        names = sorted(slo_mix)
+        probs = np.array([slo_mix[c] for c in names], dtype=np.float64)
+        probs /= probs.sum()
+        classes = [names[j] for j in rng.choice(len(names), size=total, p=probs)]
+    else:
+        classes = None
 
     out: List[Request] = []
     for i in range(total):
         rid = i - warmup            # warm-up requests get negative ids
+        cls = classes[i] if classes else "standard"
         out.append(Request(
             rid=rid,
             arrival=float(arrivals[i]),
             prompt_len=int(lengths[i]),
             reuse_len=int(lengths[i] * reuse_frac[i]),
             prefix_id=int(prefixes[i]),
+            slo_class=cls,
+            slo_scale=SLO_CLASSES[cls] if classes else 0.0,
         ))
     return out

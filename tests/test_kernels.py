@@ -169,6 +169,7 @@ def test_rglru_decay_semantics():
 
 
 # ---------------------------------------------------- flash custom-VJP (XLA)
+@pytest.mark.slow
 def test_flash_xla_forward_and_grads():
     """The production non-TPU flash path (custom VJP) matches the oracle in
     both value and gradients."""
@@ -196,6 +197,7 @@ def test_flash_xla_forward_and_grads():
 
 
 # --------------------------------------------------------- SSD dual (train)
+@pytest.mark.slow
 def test_ssd_dual_matches_recurrence():
     """The chunked dual (matmul) form — the memory-safe train path — is the
     same map as the sequential recurrence, values and grads."""

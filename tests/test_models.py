@@ -32,6 +32,7 @@ def _batch(cfg, B=2, T=16, rng=RNG):
 
 
 @pytest.mark.parametrize("arch", ALL_ARCHS)
+@pytest.mark.slow
 def test_smoke_train_step(arch):
     """One forward/train step on CPU: correct shapes, finite, grads flow."""
     cfg = SMOKES[arch]

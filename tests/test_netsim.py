@@ -115,6 +115,148 @@ def test_victim_unit_ingress_contention():
         assert f.rate == pytest.approx(1.0 / 3.0)
 
 
+def test_remove_purges_link_accounting():
+    """Regression: cancelling a flow (e.g. pruned Stage-1 recompute) must
+    release its rate from the link accounting immediately — otherwise
+    ``bottleneck`` / ``bottleneck_protected`` rho stays inflated until the
+    next reallocation."""
+    net = FluidNet(OneLink(1.0))
+    a = _flow(key=(0,))
+    b = _flow(key=(0,))
+    probe = _flow(key=(1,))
+    for f in (a, b, probe):
+        net.add(f)
+    net.reallocate()
+    assert a.rate == pytest.approx(0.5)
+    net.remove(a)                      # cancelled, NOT followed by reallocate
+    assert a.rate == 0.0
+    _, rho = net.bottleneck(probe)
+    assert rho == pytest.approx(0.5)   # only b's rate remains
+    _, rho_p = net.bottleneck_protected(probe, lambda f: True)
+    assert rho_p == pytest.approx(0.5)
+    assert net._link_rate[0] == pytest.approx(0.5)
+
+
+def test_completed_flows_release_bandwidth_accounting():
+    """Flows finished by ``advance`` stop counting toward rho as well."""
+    net = FluidNet(OneLink(1.0))
+    small = _flow(size=1.0, key=(0,))
+    big = _flow(size=100.0, key=(0,))
+    probe = _flow(key=(1,))
+    for f in (small, big, probe):
+        net.add(f)
+    net.reallocate()
+    done = net.advance(2.0)            # small (1.0 bytes at 0.5) finishes
+    assert done == [small]
+    _, rho = net.bottleneck(probe)
+    assert rho == pytest.approx(0.5)
+
+
+def _random_churn(seed, incremental, n_flows=60, n_events=120):
+    """Drive one FluidNet through a random add/remove/rekey/recap sequence;
+    returns the rate vector after every reallocation."""
+    rng = np.random.default_rng(seed)
+    topo = FatTree(racks=2, hosts_per_rack=4, nic_bw=1.0,
+                   gpus_per_server=2, scaleup_bw=4.0)
+    net = FluidNet(topo, incremental=incremental)
+    flows = []
+    fid = 0
+    def mk():
+        nonlocal fid
+        fid += 1
+        f = _flow(src=int(rng.integers(0, topo.n_nodes)),
+                  dst=int(rng.integers(0, topo.n_nodes)),
+                  size=float(rng.uniform(1, 50)),
+                  key=(int(rng.integers(0, 4)),),
+                  cap=float(rng.uniform(0.05, 0.5))
+                  if rng.uniform() < 0.3 else None)
+        f.fid = 10_000 * (seed + 1) + fid       # deterministic across modes
+        return f
+    out = []
+    for _ in range(n_flows):
+        f = mk(); flows.append(f); net.add(f)
+    for _ in range(n_events):
+        op = rng.integers(0, 4)
+        if op == 0 or not flows:
+            f = mk(); flows.append(f); net.add(f)
+        elif op == 1:
+            f = flows.pop(int(rng.integers(len(flows)))); net.remove(f)
+        elif op == 2:
+            f = flows[int(rng.integers(len(flows)))]
+            f.priority_key = (int(rng.integers(0, 4)),)
+        else:
+            f = flows[int(rng.integers(len(flows)))]
+            f.rate_cap = float(rng.uniform(0.05, 0.5)) \
+                if rng.uniform() < 0.5 else None
+        net.reallocate()
+        out.append(sorted((f.fid, f.rate) for f in flows))
+    return out
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_incremental_matches_full(seed):
+    """Dirty-group incremental reallocation must produce BIT-IDENTICAL rates
+    to the from-scratch allocation under arbitrary churn (adds, removals,
+    key changes, cap changes)."""
+    inc = _random_churn(seed, incremental=True)
+    full = _random_churn(seed, incremental=False)
+    assert inc == full                 # exact float equality, every epoch
+
+
+def test_incremental_skips_clean_groups():
+    """A reallocation with nothing changed must re-fill nothing; churn in
+    the lowest-priority group must not re-fill the more urgent groups."""
+    topo = SingleToR(8, nic_bw=1.0, gpus_per_server=2, scaleup_bw=2.0)
+    net = FluidNet(topo)
+    hi = [_flow(src=0, dst=4, key=(0,)) for _ in range(3)]
+    lo = [_flow(src=1, dst=5, key=(9,)) for _ in range(3)]   # disjoint NICs
+    for f in hi + lo:
+        net.add(f)
+    net.reallocate()
+    fills0 = net.stats["group_fills"]
+    net.reallocate()                   # no change at all -> zero fills
+    assert net.stats["group_fills"] == fills0
+    extra = _flow(src=1, dst=5, key=(9,))
+    net.add(extra)
+    net.reallocate()                   # dirty: only the (9,) group
+    assert net.stats["group_fills"] == fills0 + 1
+    for f in hi:
+        assert f.rate == pytest.approx(1.0 / 3.0)
+
+
+def test_next_completion_heap_matches_scan():
+    """The lazy-invalidation heap must return the same prediction as a
+    linear scan across rate changes, removals and partial progress."""
+    rng = np.random.default_rng(3)
+    topo = SingleToR(4, nic_bw=1.0, gpus_per_server=2, scaleup_bw=2.0)
+    net = FluidNet(topo)
+    flows = [_flow(src=int(rng.integers(0, 4)), dst=int(rng.integers(0, 4)),
+                   size=float(rng.uniform(5, 50)),
+                   key=(int(rng.integers(0, 3)),)) for _ in range(12)]
+    for f in flows:
+        net.add(f)
+    t = 0.0
+    for step in range(40):
+        if step % 7 == 3 and net.flows:
+            victim = next(iter(net.flows.values()))
+            net.remove(victim)
+        for f in net.flows.values():
+            if rng.uniform() < 0.2:
+                f.priority_key = (int(rng.integers(0, 3)),)
+        net.reallocate()
+        nxt = net.next_completion()
+        best = min(((net.now + max(f.remaining / f.rate, 1e-12), f.fid)
+                    for f in net.flows.values() if f.rate > 0.0),
+                   default=None)
+        if best is None:
+            assert nxt is None
+            break
+        assert nxt is not None
+        assert nxt[0] == pytest.approx(best[0], rel=1e-9)
+        t = min(best[0], t + 0.5)
+        net.advance(t)
+
+
 def test_event_queue_fifo_and_epoch():
     q = EventQueue()
     q.push(1.0, "a", None)

@@ -116,11 +116,9 @@ def test_serve_path_runs_rmlq_promotion_and_red(smollm):
     res = srv.serve(reqs)
     assert len(res) == 5 and all(r.ttft > 0 for r in res)
     rt = srv.runtime
-    assert rt.red_ranks, "Algorithm 1 (RED ordering) never ran on serve path"
-    promoted = [fid for fid, lvl0 in rt.submit_level.items()
-                if rt.flows[fid].stage == Stage.P2D
-                and rt.flows[fid].level < lvl0]
-    assert promoted, "no P2D flow was ever promoted through the RMLQ"
+    assert rt.n_red_runs > 0, "Algorithm 1 (RED ordering) never ran on serve path"
+    assert rt.promoted_count(Stage.P2D) > 0, \
+        "no P2D flow was ever promoted through the RMLQ"
 
 
 def test_serve_path_soft_pruning(smollm):

@@ -98,6 +98,7 @@ def test_snapshot_regime_for_ssm():
 # ------------------------------------------------------- continuous batching
 @pytest.mark.parametrize("arch", ["smollm-360m", "recurrentgemma-9b",
                                   "deepseek-moe-16b"])
+@pytest.mark.slow
 def test_decode_batch_matches_single_sequence(arch):
     """Slotted batched decode produces the same greedy tokens as prefilling
     the whole continuation (teacher-forced check)."""
@@ -194,6 +195,7 @@ def test_disagg_reuse_is_exact(smollm):
     assert r_warm.first_token == r_cold.first_token
 
 
+@pytest.mark.slow
 def test_disagg_policies_all_run(smollm):
     cfg, model, params = smollm
     rng = np.random.default_rng(8)

@@ -7,6 +7,10 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow      # multi-minute compile in a subprocess
+
 HERE = os.path.dirname(__file__)
 SRC = os.path.join(HERE, "..", "src")
 

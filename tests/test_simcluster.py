@@ -53,6 +53,7 @@ def test_contention_free_is_lower_bound():
     assert m_free.summary()["ttft_mean"] <= m_cont.summary()["ttft_mean"] + 1e-9
 
 
+@pytest.mark.slow
 def test_mfs_beats_stage_agnostic_under_contention():
     """Engineered hot-prefix overload: MFS's SLO attainment must match or
     beat every stage-agnostic baseline, and its CCT slowdown must be lowest
@@ -69,6 +70,7 @@ def test_mfs_beats_stage_agnostic_under_contention():
     assert cct["mfs"] <= min(cct[p] for p in ("fs", "sjf", "edf")) + 1e-9
 
 
+@pytest.mark.slow
 def test_mfs_close_to_llf_oracle():
     """MFS approximates LLF: within 10% attainment of the clairvoyant
     oracle on the default workload."""
@@ -77,6 +79,79 @@ def test_mfs_close_to_llf_oracle():
     a_llf = _run("llf-oracle", spec, n=64,
                  rps=12.0).summary()["slo_attainment"]
     assert a_mfs >= a_llf - 0.10
+
+
+@pytest.mark.slow
+def test_runtime_state_stays_bounded_on_long_traces():
+    """State GC: runtime memory must be O(active requests), not O(history) —
+    the peak live-flow count over a 400-request trace stays far below the
+    total number of submitted flows, and nothing is retained at the end."""
+    spec = _spec(n_units=2)
+    trace = generate_trace(WORKLOADS["qwen-agent"], n_requests=400, rps=24.0,
+                           seed=0, warmup=8)
+    sim = ClusterSim(spec, make_policy("mfs"))
+    rt = sim.runtime
+    peak = {"flows": 0, "submit_level": 0, "red_ranks": 0}
+    orig = sim.on_request_done
+    def spy(item, bs):
+        peak["flows"] = max(peak["flows"], len(rt.flows))
+        peak["submit_level"] = max(peak["submit_level"], len(rt.submit_level))
+        peak["red_ranks"] = max(peak["red_ranks"], len(rt.red_ranks))
+        orig(item, bs)
+    sim.on_request_done = spy
+    m = sim.run(trace)
+    assert m.summary()["n"] == 400
+    assert peak["flows"] > 0
+    # hundreds of requests x ~20 flows each; live set must stay way below
+    assert peak["flows"] < 2000, peak
+    # flows and submit_level entries are created and evicted together
+    assert peak["submit_level"] == peak["flows"], peak
+    # end-of-run: everything evicted
+    assert len(rt.flows) == 0
+    assert len(rt.submit_level) == 0
+    assert len(rt.red_ranks) == 0
+    assert len(rt.batch_of_request) == 0
+    assert not rt.pruned_rids
+
+
+def test_stage_log_is_bounded():
+    """Tracing keeps only the most recent ``stage_log_limit`` entries."""
+    spec = _spec()
+    trace = generate_trace(WORKLOADS["qwen-agent"], n_requests=32, rps=16.0,
+                           seed=0)
+    sim = ClusterSim(spec, make_policy("fs"))
+    sim.runtime.trace_stages = True
+    sim.runtime.stage_log = type(sim.runtime.stage_log)(maxlen=50)
+    sim.run(trace)
+    assert len(sim.runtime.stage_log) == 50
+
+
+def test_per_request_slo_classes_scale_deadlines():
+    """A tight-class request gets a proportionally tighter deadline than a
+    loose-class one, in both fixed and per-request SLO modes."""
+    from repro.simcluster.trace import SLO_CLASSES
+    for slo_mode in ("fixed", "per-request"):
+        spec = _spec(slo_mode=slo_mode)
+        trace = generate_trace(WORKLOADS["qwen-conv"], n_requests=40, rps=4.0,
+                               seed=1, slo_mix={"tight": 0.5, "loose": 0.5})
+        sim = ClusterSim(spec, make_policy("fs"))
+        m = sim.run(trace)
+        budget = {r.rid: m.deadline[r.rid] for r in trace if r.rid in m.deadline}
+        by_cls = {"tight": [], "loose": []}
+        for r in trace:
+            if r.rid in budget:
+                by_cls[r.slo_class].append(budget[r.rid] /
+                                           (m.ideal_ttft[r.rid]
+                                            if slo_mode == "per-request" else 1.0))
+        if slo_mode == "per-request":
+            # budget / own ideal == the class scale exactly
+            assert np.allclose(by_cls["tight"], SLO_CLASSES["tight"])
+            assert np.allclose(by_cls["loose"], SLO_CLASSES["loose"])
+        else:
+            # fixed base: loose budgets are exactly 4x tight budgets
+            ratio = np.mean(by_cls["loose"]) / np.mean(by_cls["tight"])
+            assert ratio == pytest.approx(
+                SLO_CLASSES["loose"] / SLO_CLASSES["tight"])
 
 
 def test_deterministic_given_seed():

@@ -3,6 +3,7 @@ launcher-level serving with MFS over the virtual fabric, the paper's
 headline ordering, and the dry-run cell planner covering the assigned
 matrix."""
 import numpy as np
+import pytest
 
 import jax
 
@@ -43,6 +44,7 @@ def test_input_specs_all_cells():
                 assert "src_embeds" in spec        # stubbed frame frontend
 
 
+@pytest.mark.slow
 def test_serve_launcher_policies_end_to_end():
     summary = serve_run("smollm-360m", n_requests=6, rps=500.0,
                         policies=("mfs", "fs"), verbose=False)

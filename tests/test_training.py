@@ -39,6 +39,7 @@ def test_adamw_grad_clipping_reported():
     assert float(gnorm) == pytest.approx(200.0)
 
 
+@pytest.mark.slow
 def test_train_loss_decreases():
     """~60 steps on a tiny fixed dataset: loss must drop measurably."""
     cfg = SMOKES["smollm-360m"]
@@ -92,6 +93,7 @@ def test_checkpoint_atomicity(tmp_path):
     assert latest_step(str(tmp_path)) == 5
 
 
+@pytest.mark.slow
 def test_launcher_end_to_end(tmp_path):
     """launch.train drives a real (tiny) run with checkpointing."""
     _, losses = train_run("smollm-360m", steps=6, batch=2, seq=16,
