@@ -10,17 +10,35 @@ thousands of requests, all 5 policies, swept across
   * a multi-tenant SLO mix (tight/standard/loose classes), reported as
     per-class attainment.
 
+The **decode-contention sweep** adds the decode plane: 8-GPU EP units
+whose collectives cross the fabric, two named decode pools (per-tenant
+class pinning), per-token decode progress and the D2D KV-migration
+rebalancer, run with rebalancing on vs. off. It reports TTFT attainment
+AND per-pool TPOT attainment for all 5 policies, plus MFS's TTFT-advantage
+ratios at the highest contended rate. D2D rebalancing traffic carries
+tight next-token deadlines, so the deadline-chasing stage-agnostic
+baselines (EDF strictly first, Karuna minimal-rate reservations, FairShare
+even split) hand it decode-downlink bandwidth that tight-TTFT P2D needed —
+MFS defers it by design (own RMLQ band below P2D, MLU promotion only as
+the next-token budget runs out) and keeps both SLOs; SJF lands close on
+TTFT by accident (migrations are large, so size-ordering also defers
+them) but has no mechanism to promote a migration whose destination's
+TPOT budget is expiring (``tbt_max`` rows record the stall behavior).
+
 Emits CSV rows (``largescale.*``) plus ``BENCH_largescale.json`` with the
 full curve data for plotting, and the fluid-net incremental-allocation
-counters (group fills per reallocation) observed during the sweep.
+counters (group fills per reallocation) observed during the sweep. With
+the decode plane disabled the legacy sections are bit-for-bit identical to
+the pre-decode-plane sweep.
 """
 from __future__ import annotations
 
 import json
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.core import make_policy
+from repro.core.decode import DecodePoolSpec, DecodeSpec
 from repro.simcluster.papermodels import PAPER_MODELS
 from repro.simcluster.sim import ClusterSim, ClusterSpec, ParallelismSpec
 from repro.simcluster.trace import (ArrivalSpec, SLO_CLASSES, WORKLOADS,
@@ -39,11 +57,41 @@ N_REQUESTS = 2000
 WARMUP = 64
 SLO_MIX = {"tight": 0.2, "standard": 0.5, "loose": 0.3}
 
+# ---- decode-contention sweep --------------------------------------------
+#: 8-GPU EP units (2 servers each => Stage-2 crosses the fabric) sharing a
+#: 0.5x decode tier; rates sit on the mmpp falling edge for this spec
+DECODE_SPEC = dict(SPEC, layer_groups=8)
+DECODE_EP = 8
+DECODE_RATIO = 0.5
+DECODE_RATES = (36.0, 48.0, 60.0)
+N_DECODE = 1000
+
+
+def _decode_spec(rebalance: bool) -> DecodeSpec:
+    """Two named pools: tenant classes pin tight/standard traffic to the
+    bigger ``interactive`` pool (tight TPOT budget), loose traffic to
+    ``bulk`` — cross-pool victim contention on the shared fabric."""
+    return DecodeSpec(
+        pools=(DecodePoolSpec(name="interactive", weight=2.0, slots_per_ep=8,
+                              tpot_budget=0.03,
+                              classes=("tight", "standard")),
+               DecodePoolSpec(name="bulk", weight=1.0, slots_per_ep=8,
+                              tpot_budget=0.10, classes=("loose",))),
+        mean_out=160, trigger_delta=2, release_delta=1, max_inflight=8,
+        min_migrate_remaining=8, rebalance=rebalance)
+
 
 def _spec() -> ClusterSpec:
     kw = dict(SPEC)
     model = PAPER_MODELS[kw.pop("model")]
     return ClusterSpec(model=model, par=ParallelismSpec(mode="ep", ep=4), **kw)
+
+
+def _spec_decode(decode: Optional[DecodeSpec]) -> ClusterSpec:
+    kw = dict(DECODE_SPEC)
+    model = PAPER_MODELS[kw.pop("model")]
+    return ClusterSpec(model=model, par=ParallelismSpec(mode="ep", ep=DECODE_EP),
+                       decode_ratio=DECODE_RATIO, decode=decode, **kw)
 
 
 def _run_one(policy: str, trace, collect_stats: bool = False) -> Dict:
@@ -118,6 +166,59 @@ def main(quick: bool = False):
         emit(rows, f"largescale.slomix.{pol}.attainment",
              "/".join(f"{by_class[c]:.3f}" for c in sorted(SLO_CLASSES)),
              "classes=" + "/".join(sorted(SLO_CLASSES)))
+
+    # ---- decode-contention sweep: D2D rebalancing on vs. off --------------
+    n_dec = 300 if quick else N_DECODE
+    dec_rates = DECODE_RATES[-1:] if quick else DECODE_RATES
+    dec = {"spec": DECODE_SPEC, "ep": DECODE_EP, "decode_ratio": DECODE_RATIO,
+           "rates": list(dec_rates), "n_requests": n_dec,
+           "ttft": {}, "tpot": {}, "tpot_by_pool": {}, "migrations": {},
+           "tbt_max": {}}
+    for mode, reb in (("d2d_on", True), ("d2d_off", False)):
+        ttft: Dict[str, List[float]] = {p: [] for p in POLICIES}
+        tpot: Dict[str, List[float]] = {p: [] for p in POLICIES}
+        by_pool: Dict[str, List[Dict[str, float]]] = {p: [] for p in POLICIES}
+        migr: Dict[str, List[int]] = {p: [] for p in POLICIES}
+        tbt: Dict[str, List[float]] = {p: [] for p in POLICIES}
+        for rate in dec_rates:
+            trace = generate_trace(WORKLOADS[WORKLOAD], n_dec, rps=rate,
+                                   seed=0, warmup=WARMUP,
+                                   arrival=ArrivalSpec(process="mmpp"),
+                                   slo_mix=SLO_MIX, decode_lens=True)
+            for pol in POLICIES:
+                sim = ClusterSim(_spec_decode(_decode_spec(reb)),
+                                 make_policy(pol))
+                t0 = time.time()
+                s = sim.run(trace).summary()
+                ttft[pol].append(s["slo_attainment"])
+                tpot[pol].append(s["tpot_attainment"])
+                by_pool[pol].append(s["tpot_by_pool"])
+                migr[pol].append(int(s["decode_migrations"]))
+                # worst token gap (records migration-stall behavior per
+                # policy alongside the mean-TBT attainment)
+                tbt[pol].append(s.get("tpot_tbt_max", 0.0))
+                assert len(sim.runtime.flows) == 0, "runtime leaked flows"
+                assert s["decode_live_sessions"] == 0, "plane leaked sessions"
+                emit(rows, f"largescale.decode.{mode}.{pol}.rps{rate:g}",
+                     f"{s['slo_attainment']:.4f}",
+                     f"tpot={s['tpot_attainment']:.3f} "
+                     f"migr={int(s['decode_migrations'])} "
+                     f"wall={time.time() - t0:.0f}s")
+        dec["ttft"][mode] = ttft
+        dec["tpot"][mode] = tpot
+        dec["tpot_by_pool"][mode] = by_pool
+        dec["migrations"][mode] = migr
+        dec["tbt_max"][mode] = tbt
+    # MFS's TTFT advantage at the highest contended rate, D2D enabled: the
+    # deadline-chasing stage-agnostic baselines pay for prioritising D2D
+    top = dec["ttft"]["d2d_on"]
+    dec["mfs_ttft_ratio_at_top"] = {
+        p: top["mfs"][-1] / max(top[p][-1], 1e-9)
+        for p in POLICIES if p != "mfs"}
+    for p, r in sorted(dec["mfs_ttft_ratio_at_top"].items()):
+        emit(rows, f"largescale.decode.mfs_over_{p}", f"{r:.2f}",
+             f"TTFT attainment ratio at rps{dec_rates[-1]:g}, d2d on")
+    result["decode"] = dec
 
     with open(OUT_JSON, "w") as fh:
         json.dump(result, fh, indent=2)

@@ -10,6 +10,8 @@ Public surface:
     MFSScheduler                   — the full arbiter (§4.5)
     FairShare, SJF, EDF, Karuna    — baselines (§6.3), LLFOracle ceiling
     GroupPlan, StageProfile, StageEmitter — shared stage-emission layer (§3.1)
+    DecodePlane, DecodeSpec        — decode plane: pools, TPOT tracking,
+                                     D2D KV-migration rebalancing
     MsFlowRuntime, RuntimeHost     — shared orchestration runtime (§5)
 """
 from .msflow import Stage, Flow, Coflow, FlowState, new_flow_id
@@ -30,6 +32,8 @@ from .policies import (
 from .arbiter import MFSScheduler
 from .stages import (ParallelismSpec, GroupPlan, StageProfile, PrefillItem,
                      BatchState, StageEmitter)
+from .decode import (DecodePoolSpec, DecodeSpec, DecodeSession, DecodePlane,
+                     partition_pools)
 from .runtime import MsFlowRuntime, RuntimeHost, RuntimeView
 
 __all__ = [
@@ -43,5 +47,7 @@ __all__ = [
     "MFSScheduler",
     "ParallelismSpec", "GroupPlan", "StageProfile", "PrefillItem",
     "BatchState", "StageEmitter",
+    "DecodePoolSpec", "DecodeSpec", "DecodeSession", "DecodePlane",
+    "partition_pools",
     "MsFlowRuntime", "RuntimeHost", "RuntimeView",
 ]

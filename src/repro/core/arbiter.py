@@ -12,6 +12,11 @@ Per-stage rules
 * Stage 2 (collectives, implicit deadline): RLI = 0 by construction — they
   block the next computation step — so they enter the top of the implicit
   band (level 2) directly.
+* D2D (decode KV migration, derived deadline): same MLU ladder as Stage 3
+  over its next-token (TPOT) deadline, re-evaluated on periodic ticks; at
+  equal level it sits in a band *below* P2D and is barred from the level-1
+  critical reservation — rebalancing is the first traffic overload control
+  defers when tight-TTFT P2D needs the downlink.
 
 Arbitration (§4.5)
 ------------------
@@ -26,7 +31,8 @@ Priority-key layout (lexicographic, smaller = more urgent):
 
     (level, band, red_rank)
       level    1..K from the RMLQ, K+1 = scavenger
-      band     0 = early-stage (Stages 1-2), 1 = last-stage (Stage 3)
+      band     0 = early-stage (Stages 1-2), 1 = last-stage (Stage 3),
+               2 = decode-plane D2D rebalancing
       red_rank rank of the owning batch in sigma (0 when unused)
 """
 from __future__ import annotations
@@ -63,7 +69,11 @@ class MFSScheduler(Policy):
 
     # ------------------------------------------------------------ promotion
     def _target_level(self, flow: Flow, view: SchedView) -> int:
-        if flow.stage == Stage.P2D:
+        if flow.stage in (Stage.P2D, Stage.D2D):
+            # D2D rebalancing enters the RMLQ with its own laxity: the same
+            # MLU ladder over its derived next-token deadline, so a migration
+            # promotes only as its destination's TPOT budget actually runs
+            # out (deferred otherwise — P2D wins the tie via the band)
             lvl = min(flow.level, self.cfg.K)
             try:
                 cap, rho = view.mlu_inputs(flow, lvl)
@@ -92,7 +102,10 @@ class MFSScheduler(Policy):
                 self.rmlq.insert(f, self._target_level(f, view))
             if self._should_reevaluate(f, view, kind, unit):
                 self.rmlq.promote(f, self._target_level(f, view))
-            band = 1 if f.stage == Stage.P2D else 0
+            # band: early stages (1-2) > last-stage P2D > D2D rebalancing —
+            # at equal level, loose-SLO decode migration is the first thing
+            # overload control defers in favor of tight-TTFT P2D
+            band = {Stage.P2D: 1, Stage.D2D: 2}.get(f.stage, 0)
             red = view.red_rank(f.rid)
             f.priority_key = (f.level, band, red)
             f.rate_cap = None
@@ -107,6 +120,8 @@ class MFSScheduler(Policy):
                 # atomicity at message level, no packet re-ordering)
                 return kind == "layer" and unit == f.unit
             return kind == "tick"           # fixed-interval updates afterwards
+        if f.stage == Stage.D2D:
+            return kind == "tick"           # no layer boundaries to ride
         if f.stage == Stage.KV_REUSE:
             return kind == "layer" and unit == f.unit
         return False                        # Stage 2 never moves (already top)

@@ -39,11 +39,14 @@ def new_flow_id() -> int:
 
 
 class Stage(IntEnum):
-    """MsFlow stage identifiers (paper §3.1)."""
+    """MsFlow stage identifiers (paper §3.1 + the decode plane)."""
 
     KV_REUSE = 1    # Stage 1: initialization — remote reusable KV fetch
     COLLECTIVE = 2  # Stage 2: execution — blocking collective
     P2D = 3         # Stage 3: completion — prefill→decode KV transfer
+    D2D = 4         # decode plane: KV migration between decode endpoints
+    #                 (load rebalancing); implicit deadline derived from the
+    #                 destination's next-token (TPOT) budget
 
 
 class FlowState(IntEnum):

@@ -21,6 +21,15 @@ Baselines (§6.3):
     minimal rate that meets their deadline (highest class, rate-capped);
     remaining bandwidth goes to non-deadline flows ordered by SJF.
 
+Decode plane: D2D KV-migration flows (Stage.D2D, derived next-token
+deadlines) reach every policy through the same ``assign`` path. The
+baselines stay stage-agnostic by construction — EDF and Karuna treat a
+tight-deadline migration like any deadline flow (and will happily starve
+prefill P2D/collectives for it), SJF sorts the large migrations last,
+FairShare splits with them evenly. Only the MFS arbiter
+(repro.core.arbiter) is decode-aware: D2D gets its own RMLQ laxity and a
+band below P2D, so overload control defers loose rebalancing first.
+
 The MFS policy itself lives in repro.core.arbiter.
 """
 from __future__ import annotations

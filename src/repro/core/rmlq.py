@@ -24,7 +24,7 @@ from __future__ import annotations
 
 from typing import Dict, Iterable, List, Optional
 
-from .msflow import Flow, FlowState
+from .msflow import Flow, FlowState, Stage
 from .urgency import MLUConfig
 
 __all__ = ["RMLQ"]
@@ -120,6 +120,9 @@ class RMLQ:
         return [len(q) for q in self._queues]
 
     def _clamp(self, level: int, flow: Flow) -> int:
-        # I3: level 1 is reserved for explicit-deadline (Stage 3) flows.
-        lo = 1 if flow.explicit_deadline else 2
+        # I3: level 1 is reserved for explicit-deadline *completion* (Stage 3)
+        # flows. D2D rebalancing carries a derived deadline too, but it is
+        # deferrable by design (overload control trades it against P2D), so
+        # it never enters the critical reservation.
+        lo = 1 if (flow.explicit_deadline and flow.stage != Stage.D2D) else 2
         return max(lo, min(self.K, level))

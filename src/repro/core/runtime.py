@@ -20,6 +20,12 @@ skip computation but their KV must arrive (Stage 1) before the consuming
 layer group runs — late arrivals stall the GPU, which is precisely the
 contention -> TTFT coupling the paper measures.
 
+With a :class:`repro.core.decode.DecodePlane` attached, requests live past
+their first token: ``dstep`` compute events advance per-endpoint decode
+batches on the same queue, and the plane's rebalancer submits Stage-D2D
+KV-migration flows through the same ``_submit`` primitive, contending with
+S1/S2/S3 in the shared fluid net.
+
 Hosts customise the runtime through :class:`RuntimeHost` hooks only:
 routing (KV-aware placement), admission/completion bookkeeping, and — on
 the serving path — launching the *real* JAX prefill when a batch starts.
@@ -66,6 +72,14 @@ class RuntimeHost:
 
     def on_coflow_done(self, bs: BatchState, co: Coflow, ideal: float) -> None:
         """Called when a Stage-2 coflow completes (CCT bookkeeping)."""
+
+    def on_decode_admitted(self, sess) -> None:
+        """Called when a request enters the decode plane (TTFT materialised
+        and a ``DecodePlane`` is attached)."""
+
+    def on_decode_done(self, sess) -> None:
+        """Called when a decode session produces its last token (TPOT/TBT
+        metrics are final on ``sess``)."""
 
 
 class RuntimeView:
@@ -123,7 +137,8 @@ class MsFlowRuntime:
                  max_batch_tokens: int = 8192, slo_scale: float = 3.0,
                  slo_mode: str = "per-request", tick_interval: float = 2e-3,
                  drop_budget: int = 32, contention_free: bool = False,
-                 trace_stages: bool = False, stage_log_limit: int = 100_000):
+                 trace_stages: bool = False, stage_log_limit: int = 100_000,
+                 decode=None):
         self.topo = topo
         self.net = net
         self.evq = evq
@@ -138,6 +153,11 @@ class MsFlowRuntime:
         self.tick_interval = tick_interval
         self.drop_budget = drop_budget
         self.contention_free = contention_free
+        #: optional DecodePlane — requests live past their first token,
+        #: D2D rebalancing flows share the net with S1/S2/S3
+        self.decode = decode
+        if decode is not None:
+            decode.bind(self)
         self.view = RuntimeView(self)
 
         # --- per-unit serving state ---
@@ -314,12 +334,20 @@ class MsFlowRuntime:
 
     # --------------------------------------------------------- event handlers
     def _on_arrival(self, item: PrefillItem) -> None:
-        u = self.host.route(item)           # may refine reuse / owner_unit
-        item.unit = u
+        u = self.host.route(item)           # may refine reuse / owner_unit /
+        item.unit = u                       # decode pool
+        if self.decode is not None and not item.pool:
+            item.pool = self.decode.pick_pool(item)
         item.ideal_ttft = self.profile.ideal_ttft(item)
         # per-request SLO class (tight/standard/loose) scales either the
-        # workload-level base (fixed mode) or the request's own ideal
-        scale = item.slo_scale if item.slo_scale > 0 else self.slo_scale
+        # workload-level base (fixed mode) or the request's own ideal;
+        # classless requests fall back to the pool default (P2D deadlines
+        # differ per pool), then the cluster-wide default
+        scale = item.slo_scale
+        if scale <= 0 and self.decode is not None:
+            scale = self.decode.pool_slo_scale(item.pool)
+        if scale <= 0:
+            scale = self.slo_scale
         if self.slo_mode == "fixed" and self._slo_base is not None:
             item.deadline = item.arrival + scale * self._slo_base
         else:
@@ -386,9 +414,19 @@ class MsFlowRuntime:
         self.red_ranks.pop(item.rid, None)
         self.pruned_rids.discard(item.rid)
         self.host.on_request_done(item, bs)
+        if self.decode is not None:
+            if self.decode.admit(item, self.net.now):
+                self._resched(("submit",))   # admission triggered D2D flows
+                self._arm_tick()
 
     def _on_flow_done(self, f: Flow) -> None:
         self.policy.on_flow_completed(f, self.view)
+        if f.stage == Stage.D2D:
+            if self.decode is not None \
+                    and self.decode.on_d2d_done(f, self.net.now):
+                self._resched(("submit",))   # follow-up migrations submitted
+            self._evict_flow(f)
+            return
         bs = self.batch_of_request.get(f.rid)
         if f.stage == Stage.KV_REUSE:
             if bs is not None:
@@ -430,8 +468,11 @@ class MsFlowRuntime:
 
     def _on_tick(self) -> None:
         self._tick_armed = False
+        # post-compute P2D flows and in-flight D2D migrations both re-evaluate
+        # their MLU level on the periodic tick (no layer boundaries to ride)
         post = [f for f in self.net.flows.values()
-                if f.stage == Stage.P2D and not self.view.computing(f.rid)]
+                if (f.stage == Stage.P2D and not self.view.computing(f.rid))
+                or f.stage == Stage.D2D]
         if post:
             self._resched(("tick",))
             self._arm_tick()
@@ -530,6 +571,11 @@ class MsFlowRuntime:
                 self._on_compute_done(*payload)
             elif kind == "tick":
                 self._on_tick()
+            elif kind == "dstep":
+                if self.decode is not None \
+                        and self.decode.on_step(payload, t):
+                    self._resched(("submit",))   # rebalancer emitted D2D
+                    self._arm_tick()
             elif kind == "net":
                 if done:
                     self._resched(("event",))

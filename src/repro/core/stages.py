@@ -92,7 +92,9 @@ class PrefillItem:
     reuse: int = 0                     # reused prefix tokens (Stage 1)
     owner_unit: int = 0                # unit owning the reused prefix
     slo_scale: float = 0.0             # per-request SLO class scale (0 = use
-    #                                    the cluster-wide default)
+    #                                    the pool default, then cluster-wide)
+    pool: str = ""                     # decode pool ("" = host/plane picks)
+    out_tokens: int = 0                # output length (0 = decode plane samples)
     payload: Any = None
     # --- filled by the runtime ---
     unit: int = -1
@@ -162,6 +164,11 @@ class StageProfile:
         """Per-request O(1) recurrent state shipped with each P2D group."""
         return self.model.state_bytes(self.kv_dtype_bytes) / len(self.plan)
 
+    def kv_bytes_per_token(self) -> float:
+        """Full-depth per-token KV bytes (D2D migrations move the whole
+        context's KV, not one super-layer group's slice)."""
+        return sum(self.kv_bytes_group(g) for g in range(len(self.plan)))
+
     # --------------------------------------------------------------- compute
     def group_compute_time(self, items: Sequence[PrefillItem], g: int) -> float:
         """Analytic compute latency of one super-layer group for a batch."""
@@ -177,6 +184,17 @@ class StageProfile:
     def first_decode_time(self) -> float:
         m, hw, par = self.model, self.hw, self.par
         return 2.0 * m.params_active() / (par.gpus * hw.flops * hw.mfu * 0.3)
+
+    def decode_step_time(self, n_seqs: int, mean_ctx: float) -> float:
+        """One batched decode step on ONE decode endpoint: the larger of the
+        compute time and the HBM time to stream the active weights plus the
+        batch's KV (decode is memory-bound until the batch is deep)."""
+        m, hw = self.model, self.hw
+        flops_t = 2.0 * m.params_active() * max(n_seqs, 1) \
+            / (hw.flops * hw.mfu)
+        mem = m.params_active() * self.kv_dtype_bytes \
+            + max(n_seqs, 1) * mean_ctx * self.kv_bytes_per_token()
+        return max(flops_t, mem / (hw.hbm_bw * hw.hbm_eff))
 
     def recompute_time(self, reuse_tokens: int, frac: float, g: int) -> float:
         """Compute seconds to re-derive the fraction ``frac`` of a request's
@@ -237,13 +255,25 @@ class StageEmitter:
     """
 
     def __init__(self, profile: StageProfile, unit_eps: Sequence[Sequence[int]],
-                 decode_eps: Sequence[int], topo: Any):
+                 decode_eps: Sequence[int], topo: Any,
+                 pool_eps: Optional[Dict[str, Sequence[int]]] = None):
         self.profile = profile
         self.par = profile.par
         self.plan = profile.plan
         self.unit_eps = [list(e) for e in unit_eps]
         self.decode_eps = list(decode_eps)
+        # named multi-decode pools: P2D targets the owning request's pool
+        # slice; None keeps the single flat decode pool (identical emission)
+        self.pool_eps = {k: list(v) for k, v in pool_eps.items()} \
+            if pool_eps else None
         self.topo = topo
+
+    def _decode_eps_for(self, item: PrefillItem) -> List[int]:
+        if self.pool_eps is not None:
+            eps = self.pool_eps.get(item.pool)
+            if eps:
+                return eps
+        return self.decode_eps
 
     # ----------------------------------------------------------- placement
     def rank_endpoint(self, bs: BatchState, item: PrefillItem, g: int) -> int:
@@ -353,8 +383,9 @@ class StageEmitter:
             size = item.n_tokens * kvb + state_b
             if size <= 0:
                 continue
-            dst = self.decode_eps[(item.rid + g) % len(self.decode_eps)] \
-                if self.decode_eps else self.rank_endpoint(bs, item, g)
+            deps = self._decode_eps_for(item)
+            dst = deps[(item.rid + g) % len(deps)] \
+                if deps else self.rank_endpoint(bs, item, g)
             # Flow-level deadline = TTFT deadline minus remaining downstream
             # work (the first decode step) — the paper's "global TTFT
             # materialises into an explicit flow-level bound" (§3.2).

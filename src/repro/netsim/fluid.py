@@ -33,6 +33,14 @@ on two structural properties of the model, exploited incrementally:
   (predicted_t, fid, version) entries pushed on every rate change and skips
   stale entries (version mismatch / flow gone) on pop, replacing the
   per-event O(flows) scan.
+* **Warm-started within-group fills.** The wide single-key group (FairShare
+  / shared RMLQ bands) churns membership on every completion, so its
+  route-incidence matrix was rebuilt from per-flow route walks each fill.
+  ``_vec_struct`` seeds the fill from the previous fixpoint's structure and
+  patches columns (survivors kept, departures dropped, arrivals appended),
+  leaving the fill arithmetic — integer incidence sums, order-independent
+  mins — bit-identical to a cold build (``waterfill.warmstart.*``
+  microbench rows + tests/test_netsim.py assert this).
 """
 from __future__ import annotations
 
@@ -43,7 +51,7 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.msflow import Flow, FlowState
+from ..core.msflow import Flow, FlowState, Stage
 from .topology import Topology
 
 __all__ = ["FluidNet", "LOCAL_BW"]
@@ -51,6 +59,33 @@ __all__ = ["FluidNet", "LOCAL_BW"]
 LOCAL_BW = 2e12      # same-endpoint "transfer" drains at HBM-copy speed
 _EPS = 1e-12         # rate/capacity epsilon
 _EPS_BYTES = 1e-4    # a flow with less than this many bytes left is done
+
+
+class _VecStruct:
+    """Warm-started incidence structure for one wide priority group.
+
+    The route-incidence matrix ``A[link, flow]`` (and its transpose) is the
+    per-fill setup cost of the vectorized water-fill; membership of the wide
+    single-key group churns on every completion, so rebuilding it from
+    per-flow route walks dominates. The structure is seeded from the
+    previous fill and *patched* — surviving columns are kept (C-speed
+    slicing), departed columns dropped, new columns appended — which leaves
+    every retained 0/1 entry, and therefore every float the fill computes,
+    identical to a from-scratch build: integer-valued incidence sums and
+    order-independent mins make the warm-started rates bit-identical
+    (asserted in tests/test_netsim.py::test_warmstart_matches_cold).
+    Rows of links no longer used by any member stay as all-zero rows (no
+    arithmetic effect); the structure is rebuilt once they dominate.
+    """
+
+    __slots__ = ("fids", "lids", "lidx", "A", "AT")
+
+    def __init__(self, fids, lids, lidx, A):
+        self.fids = fids
+        self.lids = lids
+        self.lidx = lidx
+        self.A = A
+        self.AT = np.ascontiguousarray(A.T)
 
 
 class _GroupAlloc:
@@ -89,8 +124,13 @@ class FluidNet:
         self._pred_heap: List[Tuple[float, int, int, int]] = []
         self._pred_version: Dict[int, int] = {}
         self._pred_seq = itertools.count()
+        #: warm-started within-group fills: cache + toggle (rates are
+        #: bit-identical either way; off = rebuild incidence every fill)
+        self.warmstart = True
+        self._vec_cache: Dict[Tuple, _VecStruct] = {}
         #: instrumentation for the incremental-allocation microbenches
-        self.stats = {"reallocs": 0, "group_fills": 0, "groups_seen": 0}
+        self.stats = {"reallocs": 0, "group_fills": 0, "groups_seen": 0,
+                      "vec_builds": 0, "vec_patches": 0}
 
     # ------------------------------------------------------------- lifecycle
     def add(self, flow: Flow) -> None:
@@ -180,13 +220,17 @@ class FluidNet:
                     if lid not in res_in:
                         res_in[lid] = residual[lid]
             rate: Dict[int, float] = {}
-            self._fill_group(members, residual, rate)
+            self._fill_group(members, residual, rate, key)
             for f in members:
                 self._assign_rate(f, rate[f.fid])
             res_out = {lid: residual[lid] for lid in res_in}
             galloc[key] = _GroupAlloc(sig, res_in, res_out)
             self.stats["group_fills"] += 1
         self._galloc = galloc
+        if self._vec_cache:
+            # keep warm structures only for groups that still exist
+            self._vec_cache = {k: v for k, v in self._vec_cache.items()
+                               if k in galloc}
         self._link_rate = {lid: cap - residual[lid]
                            for lid, cap in self.topo.capacity.items()}
         self._members_stale = True
@@ -210,7 +254,7 @@ class FluidNet:
     VEC_THRESHOLD = 96
 
     def _fill_group(self, members: List[Flow], residual: Dict[int, float],
-                    rate: Dict[int, float]) -> None:
+                    rate: Dict[int, float], key: Optional[Tuple] = None) -> None:
         """Water-fill one priority group into ``rate`` (fid -> rate), drawing
         down ``residual`` in place. Pure w.r.t. flow state: the caller owns
         rate assignment and link accounting."""
@@ -223,7 +267,7 @@ class FluidNet:
             else:
                 routed.append(f)
         if len(routed) >= self.VEC_THRESHOLD:
-            self._waterfill_vec(routed, residual, rate)
+            self._waterfill_vec(routed, residual, rate, key)
         elif routed:
             self._waterfill_scalar(routed, residual, rate)
 
@@ -267,21 +311,86 @@ class FluidNet:
             for fid in newly_frozen:
                 del unfrozen[fid]
 
-    def _waterfill_vec(self, routed: List[Flow], residual: Dict[int, float],
-                       rate: Dict[int, float]) -> None:
-        """Progressive filling over the group's route-incidence matrix
-        A[link, flow]: each round raises every unfrozen flow by the smallest
-        constraint (fair share of the tightest link, or the nearest rate
-        cap), then freezes flows at cap or on a saturated link — the same
-        fixpoint as the scalar walk, in O(rounds) vector ops. Wins for the
-        wide single-key groups of FairShare and shared RMLQ bands."""
+    def _build_struct(self, routed: List[Flow]) -> _VecStruct:
         lids = sorted({lid for f in routed for lid in self.routes[f.fid]})
         lidx = {lid: i for i, lid in enumerate(lids)}
         A = np.zeros((len(lids), len(routed)))
         for j, f in enumerate(routed):
             for lid in self.routes[f.fid]:
                 A[lidx[lid], j] = 1.0
-        AT = np.ascontiguousarray(A.T)
+        self.stats["vec_builds"] += 1
+        return _VecStruct([f.fid for f in routed], lids, lidx, A)
+
+    def _vec_struct(self, routed: List[Flow],
+                    key: Optional[Tuple]) -> _VecStruct:
+        """Incidence structure for a vectorized fill: seeded from the
+        previous fixpoint's structure when only membership churned (see
+        :class:`_VecStruct`), rebuilt from the members' routes otherwise."""
+        if not self.warmstart or key is None:
+            return self._build_struct(routed)
+        fids = [f.fid for f in routed]
+        cached = self._vec_cache.get(key)
+        if cached is not None and cached.fids == fids:
+            return cached
+        struct = None
+        if cached is not None:
+            old = set(cached.fids)
+            new = set(fids)
+            kept = [j for j, fid in enumerate(cached.fids) if fid in new]
+            added = [f for f in routed if f.fid not in old]
+            # the patch only applies when survivors kept their relative
+            # order and newcomers trail (how dict-ordered churn behaves);
+            # anything else — e.g. a re-keyed flow landing mid-group —
+            # falls back to a full rebuild
+            if [cached.fids[j] for j in kept] + [f.fid for f in added] == fids:
+                A = cached.A[:, kept] if len(kept) != len(cached.fids) \
+                    else cached.A
+                lids, lidx = cached.lids, cached.lidx
+                newlinks = []
+                for f in added:
+                    for lid in self.routes[f.fid]:
+                        if lid not in lidx and lid not in newlinks:
+                            newlinks.append(lid)
+                if newlinks:
+                    lids = lids + newlinks
+                    lidx = dict(lidx)
+                    for lid in newlinks:
+                        lidx[lid] = len(lidx)
+                    A = np.vstack([A, np.zeros((len(newlinks), A.shape[1]))])
+                if added:
+                    cols = np.zeros((len(lids), len(added)))
+                    for j, f in enumerate(added):
+                        for lid in self.routes[f.fid]:
+                            cols[lidx[lid], j] = 1.0
+                    A = np.hstack([A, cols])
+                # prune rows of links no member uses anymore: keeps every
+                # round's matmul at live-link size (an absent row has no
+                # arithmetic effect, so rates stay bit-identical)
+                live = A.any(axis=1)
+                if not live.all():
+                    A = A[live]
+                    lids = [lid for lid, keep in zip(lids, live) if keep]
+                    lidx = {lid: i for i, lid in enumerate(lids)}
+                self.stats["vec_patches"] += 1
+                struct = _VecStruct(fids, lids, lidx, A)
+        if struct is None:
+            struct = self._build_struct(routed)
+        self._vec_cache[key] = struct
+        return struct
+
+    def _waterfill_vec(self, routed: List[Flow], residual: Dict[int, float],
+                       rate: Dict[int, float],
+                       key: Optional[Tuple] = None) -> None:
+        """Progressive filling over the group's route-incidence matrix
+        A[link, flow]: each round raises every unfrozen flow by the smallest
+        constraint (fair share of the tightest link, or the nearest rate
+        cap), then freezes flows at cap or on a saturated link — the same
+        fixpoint as the scalar walk, in O(rounds) vector ops. Wins for the
+        wide single-key groups of FairShare and shared RMLQ bands. The
+        incidence structure is warm-started across fills (``key`` selects
+        the cache slot); rates stay bit-identical to a cold build."""
+        struct = self._vec_struct(routed, key)
+        lids, lidx, A, AT = struct.lids, struct.lidx, struct.A, struct.AT
         res = np.array([residual[lid] for lid in lids])
         caps = np.array([math.inf if f.rate_cap is None else f.rate_cap
                          for f in routed])
@@ -395,3 +504,25 @@ class FluidNet:
     def utilization(self) -> Dict[int, float]:
         return {lid: self._link_rate.get(lid, 0.0) / cap
                 for lid, cap in self.topo.capacity.items()}
+
+    # ----------------------------------------------------- flow-class tagging
+    def class_rates(self, lid: int) -> Dict[Stage, float]:
+        """Allocated rate on one link broken down by MsFlow stage — how much
+        of a shared decode downlink P2D vs D2D is actually holding."""
+        out: Dict[Stage, float] = {}
+        for f in self._link_members(lid):
+            out[f.stage] = out.get(f.stage, 0.0) + f.rate
+        return out
+
+    def class_utilization(self, lids=None) -> Dict[Stage, float]:
+        """Aggregate allocated bandwidth per stage over ``lids`` (default:
+        every link). Benchmarks sample this to attribute contention on the
+        shared downlinks to traffic classes."""
+        out: Dict[Stage, float] = {}
+        targets = set(lids) if lids is not None else None
+        for f in self.flows.values():
+            share = sum(1 for l in self.routes[f.fid]
+                        if targets is None or l in targets)
+            if share:
+                out[f.stage] = out.get(f.stage, 0.0) + f.rate * share
+        return out

@@ -28,6 +28,11 @@ Request lifecycle (one MsFlow chain per request, §3.1):
              group's P2D KV (Stage 3) carries the derived TTFT deadline
     TTFT   = completion of the last P2D flow + first decode step
   decode  -> slotted continuous batching on the decode unit (real tokens).
+             With ``DisaggConfig.decode`` set, the modeled decode plane
+             (named pools over ``n_decode_units`` endpoints, per-token
+             ``dstep`` events, D2D rebalancing flows) also runs on the
+             virtual clock — the same ``DecodePlane`` the simulator
+             drives, so decode event traces are host-parity-testable.
 
 Pruned requests (Algorithm 1) keep their *results* exact: the prefix pages
 are local, so the real prefill still reuses them — only the modeled clock
@@ -43,6 +48,8 @@ from typing import Any, Dict, List, Optional, Sequence
 import numpy as np
 
 from ..core import MFSScheduler, Policy
+from ..core.decode import (DecodePlane, DecodeSession, DecodeSpec,
+                           partition_pools)
 from ..core.runtime import MsFlowRuntime, RuntimeHost
 from ..core.stages import (BatchState, GroupPlan, ParallelismSpec,
                            PrefillItem, StageEmitter, StageProfile)
@@ -76,6 +83,11 @@ class ServeResult:
     reused_tokens: int = 0
     unit: int = -1
     pruned: bool = False
+    # --- decode plane (modeled clock; real tokens come from DecodeBatch) ---
+    pool: str = ""
+    tpot: float = 0.0               # mean modeled time per output token
+    tpot_ok: bool = True
+    migrations: int = 0
 
 
 @dataclass(frozen=True)
@@ -93,6 +105,8 @@ class DisaggConfig:
     max_batch_tokens: int = 8192    # prefill batch cap per unit
     tick_interval: float = 2e-3     # post-compute MLU re-evaluation pitch
     drop_budget: int = 32           # Algorithm 1 global drop budget B
+    n_decode_units: int = 1         # modeled decode endpoints (pools split these)
+    decode: Optional[DecodeSpec] = None   # attach the modeled decode plane
 
 
 @dataclass
@@ -117,7 +131,8 @@ class DisaggServer(RuntimeHost):
         self.policy.reset()
 
         n_prefill = cfg.n_prefill_units * cfg.gpus_per_unit
-        self.topo = SingleToR(n_prefill + 1, nic_bw=cfg.hw.nic_bw,
+        n_decode = max(1, cfg.n_decode_units)
+        self.topo = SingleToR(n_prefill + n_decode, nic_bw=cfg.hw.nic_bw,
                               gpus_per_server=cfg.gpus_per_unit,
                               scaleup_bw=cfg.hw.scaleup_bw)
         mcfg = model.cfg
@@ -131,14 +146,22 @@ class DisaggServer(RuntimeHost):
         unit_eps = [list(range(u * cfg.gpus_per_unit,
                                (u + 1) * cfg.gpus_per_unit))
                     for u in range(cfg.n_prefill_units)]
+        decode_eps = list(range(n_prefill, n_prefill + n_decode))
+        self.decode_plane: Optional[DecodePlane] = None
+        pool_eps = None
+        if cfg.decode is not None:
+            pool_eps = partition_pools(cfg.decode.pools, decode_eps)
+            self.decode_plane = DecodePlane(cfg.decode, self.profile,
+                                            pool_eps, seed=0)
         emitter = StageEmitter(self.profile, unit_eps,
-                               decode_eps=[n_prefill], topo=self.topo)
+                               decode_eps=decode_eps, topo=self.topo,
+                               pool_eps=pool_eps)
         self.runtime = MsFlowRuntime(
             self.topo, FluidNet(self.topo), EventQueue(), self.policy,
             self.profile, emitter, host=self, n_units=cfg.n_prefill_units,
             max_batch_tokens=cfg.max_batch_tokens, slo_scale=cfg.slo_scale,
             slo_mode="per-request", tick_interval=cfg.tick_interval,
-            drop_budget=cfg.drop_budget)
+            drop_budget=cfg.drop_budget, decode=self.decode_plane)
 
         self.engines = [ServingEngine(model, params)
                         for _ in range(cfg.n_prefill_units)]
@@ -168,6 +191,8 @@ class DisaggServer(RuntimeHost):
             reuse, entry = 0, None
         job.entry = entry
         item.reuse = reuse
+        # decode pool: left empty here, so the runtime fills it via
+        # DecodePlane.pick_pool after routing (set item.pool to override)
         owner = entry.owner_unit if entry else None
         best, best_score = 0, -math.inf
         for u in range(self.cfg.n_prefill_units):
@@ -219,13 +244,25 @@ class DisaggServer(RuntimeHost):
                              job.first_token, max_new=r.max_new)
         job.cache = None
 
+    def on_decode_admitted(self, sess: DecodeSession) -> None:
+        res = self.results.get(sess.rid)
+        if res is not None:
+            res.pool = sess.pool
+
+    def on_decode_done(self, sess: DecodeSession) -> None:
+        res = self.results.get(sess.rid)
+        if res is not None:
+            res.tpot = sess.tpot
+            res.tpot_ok = sess.tpot_ok
+            res.migrations = sess.n_migrations
+
     # --------------------------------------------------------------- serving
     def serve(self, requests: Sequence[ServeRequest],
               decode_steps: int = 4) -> List[ServeResult]:
         for r in sorted(requests, key=lambda x: x.arrival):
             self.runtime.push_arrival(PrefillItem(
                 rid=r.rid, arrival=r.arrival, n_tokens=len(r.tokens),
-                payload=_ServeJob(req=r)))
+                out_tokens=r.max_new, payload=_ServeJob(req=r)))
         self.runtime.run()
         # all prefills finished: run the decode continuation (real tokens)
         for _ in range(decode_steps):

@@ -1,13 +1,16 @@
-"""Serving metrics — TTFT, SLO attainment, CCT, earliness (§6.1).
+"""Serving metrics — TTFT, SLO attainment, CCT, earliness (§6.1), plus the
+decode plane's TPOT/TBT attainment per pool and per SLO class.
 
 SLO definition follows the paper: threshold = ``slo_scale`` (default 3x) times
 the TTFT measured under low-load (contention-free) conditions for the same
 request — computed analytically per request by the simulator's ideal path.
+Decode TPOT attainment compares each request's mean time-per-output-token
+(== mean TBT after the first token) against its pool's per-class budget.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -43,6 +46,13 @@ class SimMetrics:
     stall_time: Dict[int, float] = field(default_factory=dict)
     coflows: List[CoflowRecord] = field(default_factory=list)
     pruned: int = 0
+    # --- decode plane (empty when no DecodePlane is attached) ---
+    slo_class: Dict[int, str] = field(default_factory=dict)
+    pool_of: Dict[int, str] = field(default_factory=dict)
+    tpot: Dict[int, float] = field(default_factory=dict)      # mean TBT
+    tbt_max: Dict[int, float] = field(default_factory=dict)   # worst gap
+    tpot_budget: Dict[int, float] = field(default_factory=dict)
+    decode_stats: Dict[str, float] = field(default_factory=dict)
 
     # ------------------------------------------------------------- summaries
     def _rids(self):
@@ -91,6 +101,50 @@ class SimMetrics:
         pos = e[e > 0]
         return float(pos.mean()) if pos.size else 0.0
 
+    # --------------------------------------------------------- decode plane
+    def _tpot_rids(self, pool: Optional[str] = None,
+                   slo_class: Optional[str] = None) -> List[int]:
+        return [r for r in self.tpot
+                if r >= 0
+                and (pool is None or self.pool_of.get(r) == pool)
+                and (slo_class is None or self.slo_class.get(r) == slo_class)]
+
+    def tpot_attainment(self, pool: Optional[str] = None,
+                        slo_class: Optional[str] = None) -> float:
+        """Fraction of decoded requests whose mean TBT met their budget."""
+        rids = self._tpot_rids(pool, slo_class)
+        if not rids:
+            return float("nan")
+        ok = sum(1 for r in rids
+                 if self.tpot[r] <= self.tpot_budget.get(r, np.inf) + 1e-12)
+        return ok / len(rids)
+
+    def tpot_attainment_by_pool(self) -> Dict[str, float]:
+        pools = sorted({self.pool_of[r] for r in self._tpot_rids()})
+        return {p: self.tpot_attainment(pool=p) for p in pools}
+
+    def tpot_attainment_by_class(self) -> Dict[str, float]:
+        classes = sorted({self.slo_class.get(r, "standard")
+                          for r in self._tpot_rids()})
+        return {c: self.tpot_attainment(slo_class=c) for c in classes}
+
+    def slo_attainment_by_class(self) -> Dict[str, float]:
+        by: Dict[str, List[int]] = {}
+        for r in self._rids():
+            by.setdefault(self.slo_class.get(r, "standard"), []).append(r)
+        return {c: sum(1 for r in rids
+                       if self.ttft[r] <= self.deadline[r] + 1e-9) / len(rids)
+                for c, rids in sorted(by.items())}
+
+    def tpot_stats(self) -> Dict[str, float]:
+        v = np.array([self.tpot[r] for r in self._tpot_rids()])
+        if v.size == 0:
+            return {}
+        return {"mean": float(v.mean()), "p50": float(np.percentile(v, 50)),
+                "p99": float(np.percentile(v, 99)),
+                "tbt_max": float(max((g for r, g in self.tbt_max.items()
+                                      if r >= 0), default=0.0))}
+
     def summary(self) -> Dict[str, float]:
         s = {"policy": self.policy, "n": len(self._rids()),
              "slo_attainment": self.slo_attainment(),
@@ -99,4 +153,9 @@ class SimMetrics:
              "pos_earliness": self.positive_earliness(),
              "pruned": self.pruned}
         s.update({f"ttft_{k}": v for k, v in self.ttft_stats().items()})
+        if self.tpot:            # decode plane attached: report TPOT side
+            s["tpot_attainment"] = self.tpot_attainment()
+            s["tpot_by_pool"] = self.tpot_attainment_by_pool()
+            s.update({f"tpot_{k}": v for k, v in self.tpot_stats().items()})
+            s.update({f"decode_{k}": v for k, v in self.decode_stats.items()})
         return s

@@ -8,8 +8,11 @@ verbatim with the real-JAX serving path (``repro.serving.disagg``). This
 module contributes only what is simulation-specific:
 
   * cluster sizing — units, parallelism spec, ToR / fat-tree topology,
-    decode-endpoint pool;
-  * KV-affinity routing over synthetic prefix ids (Zipf traces);
+    decode-endpoint pool (optionally partitioned into named multi-decode
+    pools driven by a ``DecodeSpec`` — the decode plane with per-token
+    progress, TPOT metrics and D2D rebalancing flows);
+  * KV-affinity routing over synthetic prefix ids (Zipf traces), which
+    also pins each request to its decode pool;
   * metrics collection into :class:`SimMetrics`.
 
 A *prefill unit* hosts one model replica on ``gpus_per_unit`` endpoints with
@@ -25,8 +28,12 @@ from typing import List, Sequence
 
 import numpy as np
 
+from typing import Optional
+
 from ..configs.base import ArchConfig
 from ..core import Coflow, Policy
+from ..core.decode import (DecodePlane, DecodeSession, DecodeSpec,
+                           partition_pools)
 from ..core.runtime import MsFlowRuntime, RuntimeHost
 from ..core.stages import (BatchState, GroupPlan, ParallelismSpec,
                            PrefillItem, StageEmitter, StageProfile)
@@ -35,7 +42,7 @@ from .hw import HW, A100
 from .metrics import CoflowRecord, SimMetrics
 from .trace import Request
 
-__all__ = ["ParallelismSpec", "ClusterSpec", "ClusterSim"]
+__all__ = ["ParallelismSpec", "ClusterSpec", "ClusterSim", "DecodeSpec"]
 
 
 @dataclass
@@ -57,6 +64,9 @@ class ClusterSpec:
     tick_interval: float = 2e-3
     drop_budget: int = 32              # Algorithm 1 global drop budget B
     hosts_per_rack: int = 8
+    # decode plane (None = legacy behavior: requests end at the first token
+    # and the sim is bit-identical to pre-decode-plane runs)
+    decode: Optional[DecodeSpec] = None
 
     def n_groups(self) -> int:
         if self.layer_groups:
@@ -98,13 +108,21 @@ class ClusterSim(RuntimeHost):
         unit_eps = [list(range(u * par.gpus, (u + 1) * par.gpus))
                     for u in range(spec.n_units)]
         decode_eps = list(range(n_prefill, total))
-        emitter = StageEmitter(self.profile, unit_eps, decode_eps, self.topo)
+        self.decode_plane: Optional[DecodePlane] = None
+        pool_eps = None
+        if spec.decode is not None:
+            pool_eps = partition_pools(spec.decode.pools, decode_eps)
+            self.decode_plane = DecodePlane(spec.decode, self.profile,
+                                            pool_eps, seed=seed)
+        emitter = StageEmitter(self.profile, unit_eps, decode_eps, self.topo,
+                               pool_eps=pool_eps)
         self.runtime = MsFlowRuntime(
             self.topo, FluidNet(self.topo), EventQueue(), policy,
             self.profile, emitter, host=self, n_units=spec.n_units,
             max_batch_tokens=spec.max_batch_tokens, slo_scale=spec.slo_scale,
             slo_mode=spec.slo_mode, tick_interval=spec.tick_interval,
-            drop_budget=spec.drop_budget, contention_free=contention_free)
+            drop_budget=spec.drop_budget, contention_free=contention_free,
+            decode=self.decode_plane)
         self.metrics = SimMetrics(policy=policy.name)
 
     # kept as properties so tooling (and tests) can poke at the shared state
@@ -121,6 +139,10 @@ class ClusterSim(RuntimeHost):
         return prefix_id % self.spec.n_units
 
     def route(self, item: PrefillItem) -> int:
+        # pool selection rides on routing: the runtime fills ``item.pool``
+        # via ``DecodePlane.pick_pool`` right after this hook returns (class
+        # pinning, then weighted rid hash); a host that wants custom
+        # placement just sets ``item.pool`` here and the runtime keeps it
         owner = item.owner_unit
         best, best_score = 0, -math.inf
         for u in range(self.spec.n_units):
@@ -140,6 +162,7 @@ class ClusterSim(RuntimeHost):
         # compares directly against the recorded (relative) TTFT
         self.metrics.deadline[r.rid] = item.deadline - item.arrival
         self.metrics.ideal_ttft[r.rid] = item.ideal_ttft
+        self.metrics.slo_class[r.rid] = r.slo_class
 
     def on_batch_started(self, bs: BatchState) -> None:
         for it in bs.items:
@@ -158,6 +181,14 @@ class ClusterSim(RuntimeHost):
             co.cid, bs.unit, co.layer, co.started, self.runtime.net.now,
             co.size, ideal))
 
+    def on_decode_admitted(self, sess: DecodeSession) -> None:
+        self.metrics.pool_of[sess.rid] = sess.pool
+
+    def on_decode_done(self, sess: DecodeSession) -> None:
+        self.metrics.tpot[sess.rid] = sess.tpot
+        self.metrics.tbt_max[sess.rid] = sess.gap_max
+        self.metrics.tpot_budget[sess.rid] = sess.tpot_budget
+
     # ------------------------------------------------------------------ run
     def run(self, requests: Sequence[Request], max_events: int = 5_000_000) -> SimMetrics:
         import copy
@@ -169,10 +200,13 @@ class ClusterSim(RuntimeHost):
             items.append(PrefillItem(
                 rid=r.rid, arrival=r.arrival, n_tokens=r.prompt_len,
                 reuse=r.reuse_len, owner_unit=self._owner_unit(r.prefix_id),
-                slo_scale=getattr(r, "slo_scale", 0.0), payload=r))
+                slo_scale=getattr(r, "slo_scale", 0.0),
+                out_tokens=getattr(r, "out_len", 0), payload=r))
         self.runtime.calibrate_slo(items)
         for it in items:
             self.runtime.push_arrival(it)
         self.runtime.run(max_events=max_events)
         self.metrics.pruned = self.runtime.n_pruned
+        if self.decode_plane is not None:
+            self.metrics.decode_stats = self.decode_plane.summary()
         return self.metrics

@@ -52,6 +52,7 @@ class Request:
     # multi-tenant SLO class (0.0 = defer to the cluster-wide slo_scale)
     slo_class: str = "standard"
     slo_scale: float = 0.0
+    out_len: int = 0           # decode output tokens (0 = plane samples)
     # filled by the simulator:
     deadline: float = 0.0
     unit: int = -1
@@ -72,6 +73,9 @@ class WorkloadSpec:
     n_prefixes: int = 64
     zipf_a: float = 1.2        # prefix popularity skew (agent = hotter)
     max_prompt: int = 0        # 0 = 8x mean
+    mean_out: int = 256        # decode output length (lognormal mean)
+    out_sigma: float = 0.8     # lognormal shape for output lengths
+    max_out: int = 0           # 0 = 8x mean_out
 
 
 @dataclass(frozen=True)
@@ -145,7 +149,8 @@ def _arrivals_mmpp(rng: np.random.Generator, rps: float, n: int,
 def generate_trace(spec: WorkloadSpec, n_requests: int, rps: float,
                    seed: int = 0, warmup: int = 0,
                    arrival: Optional[ArrivalSpec] = None,
-                   slo_mix: Optional[Dict[str, float]] = None) -> List[Request]:
+                   slo_mix: Optional[Dict[str, float]] = None,
+                   decode_lens: bool = False) -> List[Request]:
     """``n_requests`` requests at mean rate ``rps`` requests/second.
 
     ``warmup`` extra leading requests are generated and flagged by negative
@@ -156,6 +161,10 @@ def generate_trace(spec: WorkloadSpec, n_requests: int, rps: float,
     draws to the historical generator, so fixed seeds reproduce old traces).
     ``slo_mix`` maps SLO class names from :data:`SLO_CLASSES` to sampling
     probabilities; ``None`` leaves every request on the cluster default.
+    ``decode_lens`` samples per-request output lengths (lognormal over
+    ``mean_out``/``out_sigma``) into ``Request.out_len`` for decode-plane
+    runs — drawn from a *separate* RNG stream so the base trace stays
+    bit-identical for a fixed seed whether or not lengths are requested.
     """
     rng = np.random.default_rng(seed)
     total = n_requests + warmup
@@ -191,6 +200,14 @@ def generate_trace(spec: WorkloadSpec, n_requests: int, rps: float,
         classes = [names[j] for j in rng.choice(len(names), size=total, p=probs)]
     else:
         classes = None
+    if decode_lens:
+        out_rng = np.random.default_rng(seed + 7919)   # independent stream
+        mu_o = np.log(spec.mean_out) - spec.out_sigma ** 2 / 2.0
+        cap_o = spec.max_out or 8 * spec.mean_out
+        out_lens = np.clip(out_rng.lognormal(mu_o, spec.out_sigma, size=total),
+                           1, cap_o).astype(int)
+    else:
+        out_lens = None
 
     out: List[Request] = []
     for i in range(total):
@@ -204,5 +221,6 @@ def generate_trace(spec: WorkloadSpec, n_requests: int, rps: float,
             prefix_id=int(prefixes[i]),
             slo_class=cls,
             slo_scale=SLO_CLASSES[cls] if classes else 0.0,
+            out_len=int(out_lens[i]) if out_lens is not None else 0,
         ))
     return out

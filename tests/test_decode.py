@@ -1,0 +1,337 @@
+"""Decode plane: D2D deadline derivation, rebalancer trigger/hysteresis,
+pool routing + per-pool P2D deadlines, eviction releasing pool slots
+(O(active) invariant), the MFS decode arm (D2D band/reservation rules),
+and sim<->serve parity extended to decode events."""
+import numpy as np
+import pytest
+
+from repro.core import Stage, make_policy
+from repro.core.arbiter import MFSScheduler
+from repro.core.decode import (DecodePlane, DecodePoolSpec, DecodeSession,
+                               DecodeSpec, partition_pools)
+from repro.core.msflow import Flow, new_flow_id
+from repro.core.stages import PrefillItem
+from repro.netsim.events import EventQueue
+from repro.core.runtime import RuntimeHost
+from repro.simcluster.papermodels import PAPER_MODELS
+from repro.simcluster.sim import ClusterSim, ClusterSpec, ParallelismSpec
+from repro.simcluster.trace import Request, WORKLOADS, generate_trace
+
+
+# ----------------------------------------------------------------- fixtures
+class _StubProfile:
+    """Duck-typed StageProfile surface the plane needs (no JAX, no model)."""
+
+    kv_dtype_bytes = 2
+    plan = (0, 1)                         # len() == 2 groups
+
+    class model:                          # noqa: N801 — attribute namespace
+        @staticmethod
+        def state_bytes(b):
+            return 0.0
+
+    def kv_bytes_per_token(self):
+        return 1000.0
+
+    def decode_step_time(self, n_seqs, mean_ctx):
+        return 0.01
+
+
+class _StubRT:
+    """Just enough MsFlowRuntime surface for plane unit tests."""
+
+    class _Net:
+        flows = {}
+
+    class _Policy:
+        def on_flow_completed(self, f, view):
+            pass
+
+    def __init__(self):
+        self.evq = EventQueue()
+        self.host = RuntimeHost()
+        self.flows = {}
+        self.submitted = []
+        self.net = self._Net()
+        self.policy = self._Policy()
+        self.view = None
+
+    def _submit(self, f):
+        self.flows[f.fid] = f
+        self.submitted.append(f)
+
+    def _evict_flow(self, f):
+        self.flows.pop(f.fid, None)
+
+
+def _plane(pools=None, eps=(0, 1), **kw):
+    pools = pools or (DecodePoolSpec(name="default", slots_per_ep=2),)
+    kw.setdefault("trigger_delta", 2)
+    kw.setdefault("release_delta", 1)
+    kw.setdefault("min_migrate_remaining", 2)
+    spec = DecodeSpec(pools=pools, **kw)
+    plane = DecodePlane(spec, _StubProfile(),
+                        partition_pools(pools, list(eps)))
+    rt = _StubRT()
+    plane.bind(rt)
+    return plane, rt
+
+
+def _item(rid, out=10, tokens=100, pool="", slo_scale=0.0):
+    return PrefillItem(rid=rid, arrival=0.0, n_tokens=tokens, pool=pool,
+                       out_tokens=out, slo_scale=slo_scale)
+
+
+# ---------------------------------------------------------- pool partitioning
+def test_partition_pools_by_weight():
+    pools = (DecodePoolSpec(name="a", weight=3.0),
+             DecodePoolSpec(name="b", weight=1.0))
+    out = partition_pools(pools, list(range(8)))
+    assert out["a"] == [0, 1, 2, 3, 4, 5]
+    assert out["b"] == [6, 7]
+    # every pool gets at least one endpoint even when outweighed
+    tiny = partition_pools((DecodePoolSpec(name="a", weight=100.0),
+                            DecodePoolSpec(name="b", weight=1e-6)),
+                           [0, 1])
+    assert tiny == {"a": [0], "b": [1]}
+    with pytest.raises(ValueError):
+        partition_pools(pools, [0])      # fewer endpoints than pools
+
+
+def test_pick_pool_class_pinning_and_weighted_fallback():
+    pools = (DecodePoolSpec(name="tightpool", classes=("tight",)),
+             DecodePoolSpec(name="open", weight=1.0))
+    plane, _ = _plane(pools=pools, eps=(0, 1))
+    tight = _item(1)
+    tight.payload = Request(rid=1, arrival=0.0, prompt_len=10, reuse_len=0,
+                            prefix_id=0, slo_class="tight")
+    assert plane.pick_pool(tight) == "tightpool"
+    # unpinned classes never land in a class-pinned pool
+    for rid in range(20):
+        it = _item(rid)
+        it.payload = Request(rid=rid, arrival=0.0, prompt_len=10, reuse_len=0,
+                             prefix_id=0, slo_class="standard")
+        assert plane.pick_pool(it) == "open"
+    # deterministic: same rid -> same pool
+    it = _item(7)
+    assert plane.pick_pool(it) == plane.pick_pool(it)
+
+
+# ------------------------------------------------------- deadline derivation
+def test_d2d_deadline_from_next_token_budget():
+    plane, _ = _plane()
+    sess = DecodeSession(rid=0, pool="default", ep=0, prompt_tokens=100,
+                         out_tokens=32, tpot_budget=0.05, started=10.0,
+                         last_token=10.0, tokens_done=4)
+    # ahead of budget: token 5 is due at started + 4 budgets = 10.2
+    assert plane.d2d_deadline(sess, now=10.05) == pytest.approx(10.2)
+    # behind budget: never less than one token budget from now
+    assert plane.d2d_deadline(sess, now=10.30) == pytest.approx(10.35)
+
+
+# -------------------------------------------------- rebalancer + hysteresis
+def test_rebalancer_trigger_and_hysteresis():
+    plane, rt = _plane(pools=(DecodePoolSpec(name="default",
+                                             slots_per_ep=8),))
+    # rids all even -> sticky admission lands every session on ep 0
+    plane.admit(_item(0), now=0.0)
+    assert not rt.submitted                 # delta 1 < trigger 2
+    plane.admit(_item(2), now=0.1)
+    # delta 2 hit the high-water mark: migrate down to release_delta
+    assert len(rt.submitted) == 1
+    f = rt.submitted[0]
+    assert f.stage == Stage.D2D and f.src == 0 and f.dst == 1
+    sess = plane.sessions[f.rid]
+    assert sess.state == "migrating"
+    assert f.deadline == pytest.approx(plane.d2d_deadline(sess, 0.1))
+    # hysteresis: back under the trigger, a new admission (delta 1 again
+    # counting the in-flight migration) does not re-trigger
+    plane.admit(_item(4), now=0.2)
+    assert len(rt.submitted) == 1
+    # migration lands: session resumes on the destination
+    plane.on_d2d_done(f, now=0.3)
+    assert sess.ep == 1 and sess.state == "active"
+    assert plane.incoming[1] == 0
+
+
+def test_migration_size_covers_context_kv():
+    plane, rt = _plane(pools=(DecodePoolSpec(name="default",
+                                             slots_per_ep=8),))
+    plane.admit(_item(0, tokens=50), now=0.0)
+    plane.admit(_item(2, tokens=50), now=0.0)
+    f = rt.submitted[0]
+    sess = plane.sessions[f.rid]
+    assert f.size == pytest.approx(sess.ctx_tokens * 1000.0)
+
+
+# --------------------------------------------------- eviction releases slots
+def test_evicted_decode_requests_release_pool_slots():
+    plane, rt = _plane(pools=(DecodePoolSpec(name="default", slots_per_ep=2),),
+                       eps=(0,), rebalance=False)
+    for rid in (0, 1, 2):
+        plane.admit(_item(rid), now=0.0)
+    assert len(plane.active[0]) == 2
+    assert plane.queued_on[0] == 1          # third waits for its endpoint
+    victim = next(iter(plane.active[0]))
+    assert plane.evict(victim, now=0.1)
+    # the freed slot went to the queued session; O(active) state everywhere
+    assert len(plane.active[0]) == 2
+    assert plane.queued_on[0] == 0 and not plane.queued["default"]
+    assert victim not in plane.sessions
+    for rid in list(plane.sessions):
+        plane.evict(rid, now=0.2)
+    assert not plane.sessions and not plane.active[0]
+    assert plane.stats["evicted"] == 3
+
+
+def test_evicting_migrating_session_cancels_d2d_flow():
+    plane, rt = _plane(pools=(DecodePoolSpec(name="default",
+                                             slots_per_ep=8),))
+    plane.admit(_item(0), now=0.0)
+    plane.admit(_item(2), now=0.0)
+    f = rt.submitted[0]
+    assert f.fid in rt.flows
+    assert plane.evict(f.rid, now=0.1)
+    assert f.fid not in rt.flows            # cancelled + evicted
+    assert plane.incoming[1] == 0 and plane._inflight["default"] == 0
+    assert f.rid not in plane.sessions
+
+
+# ------------------------------------------------------------- MFS decode arm
+class _ArbView:
+    now = 0.0
+
+    def bottleneck(self, flow):
+        return 1.0, 0.0
+
+    def mlu_inputs(self, flow, level):
+        return 1.0, 0.0
+
+    def l_curr(self, unit):
+        return 0
+
+    def computing(self, rid):
+        return False
+
+    def red_rank(self, rid):
+        return 0
+
+    def downstream_estimate(self, flow):
+        return 0.0
+
+
+def test_d2d_band_below_p2d_and_barred_from_level1():
+    sched = MFSScheduler()
+    view = _ArbView()
+    # identical critical-but-feasible urgency: MLU = 100/150 = 0.67 >= U
+    p2d = Flow(new_flow_id(), 0, 0, Stage.P2D, 100.0, src=0, dst=1,
+               target_layer=0, n_layers=4, deadline=150.0)
+    d2d = Flow(new_flow_id(), 1, -1, Stage.D2D, 100.0, src=0, dst=1,
+               target_layer=0, n_layers=4, deadline=150.0)
+    sched.on_flow_submitted(p2d, view)
+    sched.on_flow_submitted(d2d, view)
+    sched.assign([p2d, d2d], view, ("tick",))
+    assert p2d.level == 1                   # critical reservation (I3)
+    assert d2d.level >= 2                   # D2D never enters level 1
+    # the D2D band defers to last-stage P2D at any equal level
+    assert d2d.priority_key[1] == 2 and p2d.priority_key[1] == 1
+    assert p2d.priority_key < d2d.priority_key
+
+
+# ------------------------------------------------------------ sim integration
+def _sim_spec(**kw):
+    kw.setdefault("par", ParallelismSpec(mode="ep", ep=4))
+    kw.setdefault("n_units", 2)
+    kw.setdefault("layer_groups", 4)
+    return ClusterSpec(model=PAPER_MODELS["mixtral-8x7b"], **kw)
+
+
+def test_sim_decode_plane_end_to_end():
+    pools = (DecodePoolSpec(name="interactive", weight=2.0, slots_per_ep=4,
+                            tpot_budget=0.04, classes=("tight", "standard")),
+             DecodePoolSpec(name="bulk", weight=1.0, slots_per_ep=4,
+                            tpot_budget=0.12, classes=("loose",)))
+    spec = _sim_spec(decode=DecodeSpec(pools=pools, mean_out=48,
+                                       trigger_delta=2, max_inflight=4))
+    trace = generate_trace(WORKLOADS["qwen-agent"], n_requests=40, rps=10.0,
+                           seed=0, warmup=8,
+                           slo_mix={"tight": 0.3, "standard": 0.4,
+                                    "loose": 0.3},
+                           decode_lens=True)
+    sim = ClusterSim(spec, make_policy("mfs"))
+    m = sim.run(trace)
+    s = m.summary()
+    assert s["n"] == 40
+    # every request decoded to completion; plane state fully drained
+    assert s["decode_live_sessions"] == 0
+    assert len(sim.runtime.flows) == 0
+    assert sim.decode_plane.n_active() == 0
+    assert s["decode_finished"] == s["decode_admitted"]
+    # TPOT/TBT metrics recorded per pool and per class
+    assert 0.0 <= s["tpot_attainment"] <= 1.0
+    assert set(s["tpot_by_pool"]) <= {"interactive", "bulk"}
+    by_cls = m.tpot_attainment_by_class()
+    assert set(by_cls) <= {"tight", "standard", "loose"}
+    # class pinning routed loose traffic to the bulk pool
+    for rid, pool in m.pool_of.items():
+        if rid >= 0 and m.slo_class.get(rid) == "loose":
+            assert pool == "bulk"
+
+
+def test_decode_plane_off_keeps_legacy_state():
+    spec = _sim_spec()
+    trace = generate_trace(WORKLOADS["qwen-agent"], n_requests=16, rps=8.0,
+                           seed=1, warmup=4)
+    sim = ClusterSim(spec, make_policy("fs"))
+    m = sim.run(trace)
+    assert sim.decode_plane is None
+    assert not m.tpot and not m.pool_of and not m.decode_stats
+    assert "tpot_attainment" not in m.summary()
+
+
+def test_per_pool_slo_scale_differentiates_p2d_deadlines():
+    """Classless requests inherit the pool-default TTFT scale: the same
+    request routed to a looser pool gets a proportionally looser deadline
+    (fixed SLO mode: budget = scale x workload base)."""
+    pools = (DecodePoolSpec(name="fast", slo_scale=2.0, classes=("tight",)),
+             DecodePoolSpec(name="slow", slo_scale=8.0, classes=("loose",)))
+    spec = _sim_spec(decode=DecodeSpec(pools=pools, mean_out=4),
+                     slo_mode="fixed")
+    reqs = [Request(rid=0, arrival=0.0, prompt_len=256, reuse_len=0,
+                    prefix_id=0, slo_class="tight", out_len=4),
+            Request(rid=1, arrival=0.0, prompt_len=256, reuse_len=0,
+                    prefix_id=1, slo_class="loose", out_len=4)]
+    sim = ClusterSim(spec, make_policy("fs"))
+    m = sim.run(reqs)
+    assert m.pool_of[0] == "fast" and m.pool_of[1] == "slow"
+    assert m.deadline[1] / m.deadline[0] == pytest.approx(8.0 / 2.0)
+
+
+def test_decode_rebalancing_bounded_migrations_and_tpot_recorded():
+    """Engineered imbalance: sticky admission + heterogeneous output lengths
+    force migrations; every finished session still reports a TPOT and the
+    runtime evicts all D2D flows."""
+    spec = _sim_spec(decode=DecodeSpec(
+        pools=(DecodePoolSpec(name="default", slots_per_ep=2),),
+        mean_out=64, out_sigma=1.0, trigger_delta=2, release_delta=1,
+        max_inflight=4, min_migrate_remaining=2))
+    trace = generate_trace(WORKLOADS["qwen-agent"], n_requests=48, rps=24.0,
+                           seed=3, warmup=8, decode_lens=True)
+    sim = ClusterSim(spec, make_policy("mfs"))
+    m = sim.run(trace)
+    assert m.decode_stats["migrations"] > 0
+    assert m.decode_stats["live_sessions"] == 0
+    # every finished session reported a TPOT (warm-up rids included)
+    assert len(m.tpot) == m.decode_stats["finished"]
+    assert all(v >= 0.0 for v in m.tpot.values())
+
+
+def test_trace_decode_lens_is_separate_stream():
+    """Sampling output lengths must not perturb the base trace draws."""
+    a = generate_trace(WORKLOADS["qwen-conv"], 32, rps=8.0, seed=5)
+    b = generate_trace(WORKLOADS["qwen-conv"], 32, rps=8.0, seed=5,
+                       decode_lens=True)
+    for ra, rb in zip(a, b):
+        assert (ra.arrival, ra.prompt_len, ra.reuse_len, ra.prefix_id) == \
+            (rb.arrival, rb.prompt_len, rb.reuse_len, rb.prefix_id)
+        assert ra.out_len == 0 and rb.out_len >= 1

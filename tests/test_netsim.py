@@ -203,6 +203,51 @@ def test_incremental_matches_full(seed):
     assert inc == full                 # exact float equality, every epoch
 
 
+def _wide_group_churn(warmstart, n_flows=128, n_events=60):
+    """One wide single-key group (vectorized fill) under per-event
+    membership churn; returns rates after every reallocation."""
+    rng = np.random.default_rng(7)
+    topo = FatTree(racks=2, hosts_per_rack=4, nic_bw=1.0,
+                   gpus_per_server=2, scaleup_bw=4.0)
+    net = FluidNet(topo)
+    net.warmstart = warmstart
+    fid = [0]
+    def mk():
+        fid[0] += 1
+        f = _flow(src=int(rng.integers(0, topo.n_nodes)),
+                  dst=int(rng.integers(0, topo.n_nodes)),
+                  size=float(rng.uniform(1, 50)), key=(0,),
+                  cap=float(rng.uniform(0.05, 0.5))
+                  if rng.uniform() < 0.2 else None)
+        f.fid = 500_000 + fid[0]
+        return f
+    flows = [mk() for _ in range(n_flows)]
+    for f in flows:
+        net.add(f)
+    net.reallocate()
+    out = [sorted((f.fid, f.rate) for f in flows)]
+    for _ in range(n_events):
+        victim = flows.pop(int(rng.integers(len(flows))))
+        net.remove(victim)
+        nf = mk()
+        flows.append(nf)
+        net.add(nf)
+        net.reallocate()
+        out.append(sorted((f.fid, f.rate) for f in flows))
+    return out, net.stats
+
+
+def test_warmstart_matches_cold():
+    """Warm-started within-group fills (patched incidence structure) must
+    produce BIT-IDENTICAL rates to cold from-scratch builds, and must
+    actually take the patch path under pure membership churn."""
+    warm, wstats = _wide_group_churn(True)
+    cold, cstats = _wide_group_churn(False)
+    assert warm == cold                # exact float equality, every epoch
+    assert wstats["vec_patches"] > 0
+    assert cstats["vec_patches"] == 0
+
+
 def test_incremental_skips_clean_groups():
     """A reallocation with nothing changed must re-fill nothing; churn in
     the lowest-priority group must not re-fill the more urgent groups."""
@@ -255,6 +300,22 @@ def test_next_completion_heap_matches_scan():
         assert nxt[0] == pytest.approx(best[0], rel=1e-9)
         t = min(best[0], t + 0.5)
         net.advance(t)
+
+
+def test_class_rates_tag_shared_links():
+    """Per-link flow-class breakdown: a shared downlink reports how much
+    bandwidth P2D vs D2D is actually holding."""
+    net = FluidNet(OneLink(1.0))
+    p2d = _flow(key=(0,), stage=Stage.P2D)
+    d2d = _flow(key=(0,), stage=Stage.D2D)
+    net.add(p2d); net.add(d2d)
+    net.reallocate()
+    by_class = net.class_rates(0)
+    assert by_class[Stage.P2D] == pytest.approx(0.5)
+    assert by_class[Stage.D2D] == pytest.approx(0.5)
+    agg = net.class_utilization()
+    assert agg[Stage.D2D] == pytest.approx(0.5)
+    assert net.class_utilization(lids=[99]) == {}
 
 
 def test_event_queue_fifo_and_epoch():

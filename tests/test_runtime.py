@@ -87,6 +87,48 @@ def test_sim_and_serve_emit_identical_stage_traces(smollm):
             assert dl_a == pytest.approx(dl_b, rel=1e-12)
 
 
+def test_sim_and_serve_emit_identical_decode_events(smollm):
+    """Decode-plane parity: matched configs must produce identical decode
+    event streams (admit / token / finish / D2D migration) on both hosts —
+    the plane is the same code driven by the same runtime clock."""
+    from repro.core.decode import DecodePoolSpec, DecodeSpec
+
+    cfg, model, params = smollm
+    dspec = DecodeSpec(pools=(DecodePoolSpec(name="default", slots_per_ep=4),),
+                       trigger_delta=2, release_delta=1,
+                       min_migrate_remaining=2)
+    rng = np.random.default_rng(0)
+    # even rids + simultaneous arrivals -> one prefill batch admits three
+    # sessions onto the same sticky endpoint -> the rebalancer must fire
+    rids, arrivals, toks = [0, 2, 4], [0.0, 0.0, 0.0], [32, 36, 40]
+
+    srv = DisaggServer(model, params, cfg=DisaggConfig(
+        n_prefill_units=1, gpus_per_unit=1, layer_groups=2, hw=A100,
+        n_pages=128, n_decode_units=2, decode=dspec))
+    srv.decode_plane.trace = True
+    srv.serve([ServeRequest(rid=r, arrival=t,
+                            tokens=rng.integers(0, cfg.vocab, size=(n,)),
+                            max_new=6)
+               for r, t, n in zip(rids, arrivals, toks)])
+
+    sim = ClusterSim(_sim_spec(cfg, decode_ratio=2.0, decode=dspec),
+                     make_policy("mfs"))
+    sim.decode_plane.trace = True
+    sim.run([Request(rid=r, arrival=t, prompt_len=n, reuse_len=0,
+                     prefix_id=0, out_len=6)
+             for r, t, n in zip(rids, arrivals, toks)])
+
+    a = list(srv.decode_plane.event_log)
+    b = list(sim.decode_plane.event_log)
+    assert [e[:4] for e in a] == [e[:4] for e in b]     # kind/rid/ep/extra
+    for ea, eb in zip(a, b):
+        assert ea[4] == pytest.approx(eb[4], rel=1e-9)  # event times
+    kinds = {e[0] for e in a}
+    assert {"admit", "token", "finish", "d2d", "migrated"} <= kinds
+    assert srv.decode_plane.stats["migrations"] == \
+        sim.decode_plane.stats["migrations"] > 0
+
+
 def test_no_duplicated_orchestration_code():
     """The hosts must stay thin: no per-host stage emission or SchedView."""
     for mod in (sim_mod, disagg_mod):
