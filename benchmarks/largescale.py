@@ -25,11 +25,25 @@ TTFT by accident (migrations are large, so size-ordering also defers
 them) but has no mechanism to promote a migration whose destination's
 TPOT budget is expiring (``tbt_max`` rows record the stall behavior).
 
+The **KV-reuse sweep** runs the Mooncake long-context tail
+(``mooncake-tail``: ~22k-token prompts, heavy upper tail) at 16
+sp-parallel units on the testbed NIC share (50 Gbps/GPU), with the tiered
+KV store on vs. off. Store-on resolves hits against the live store
+(capacity-bounded eviction, so hit rates respond to capacity — the
+``capacity_response`` entry shows the same arm at 1/4 pooled capacity),
+Stage-1 becomes multi-source across HBM/DRAM/pooled tiers, and prefill
+completion emits loose-deadline Stage-WB writebacks that contend with
+S2/P2D on the unit uplinks. MFS holds WB in the band below D2D, so its WB
+class share on contended links is lower than FairShare's/EDF's while its
+TTFT attainment leads the deadline-chasing/fair-sharing baselines; SJF
+again lands close by accident (WB flows are the largest class, so
+size-ordering also defers them).
+
 Emits CSV rows (``largescale.*``) plus ``BENCH_largescale.json`` with the
 full curve data for plotting, and the fluid-net incremental-allocation
 counters (group fills per reallocation) observed during the sweep. With
-the decode plane disabled the legacy sections are bit-for-bit identical to
-the pre-decode-plane sweep.
+the decode plane and KV store disabled the legacy sections are bit-for-bit
+identical to the pre-decode-plane / pre-kvstore sweeps.
 """
 from __future__ import annotations
 
@@ -39,6 +53,8 @@ from typing import Dict, List, Optional
 
 from repro.core import make_policy
 from repro.core.decode import DecodePoolSpec, DecodeSpec
+from repro.core.kvstore import KVStoreSpec, TierSpec
+from repro.simcluster.hw import A100, Gb, HW
 from repro.simcluster.papermodels import PAPER_MODELS
 from repro.simcluster.sim import ClusterSim, ClusterSpec, ParallelismSpec
 from repro.simcluster.trace import (ArrivalSpec, SLO_CLASSES, WORKLOADS,
@@ -65,6 +81,44 @@ DECODE_EP = 8
 DECODE_RATIO = 0.5
 DECODE_RATES = (36.0, 48.0, 60.0)
 N_DECODE = 1000
+
+
+# ---- KV-reuse sweep: Mooncake long-context tail over the tiered store ----
+#: 16 sp-parallel units (sequence-sharded ring S2 crosses the fabric) on the
+#: paper's testbed NIC share (50 Gbps/GPU) so long-context KV movement, not
+#: compute, is the binding constraint; 2 pooled store nodes
+KV_SPEC = dict(model="mixtral-8x7b", n_units=16, gpus_per_server=4,
+               topology="fattree", hosts_per_rack=8, layer_groups=8)
+KV_WORKLOAD = "mooncake-tail"
+KV_SP = 4
+KV_RATES = (14.0, 16.0)
+KV_DECODE_RATIO = 0.5
+N_KV = 300
+KV_HW = HW("a100-50g", flops=A100.flops, hbm_bw=A100.hbm_bw,
+           nic_bw=50 * Gb, scaleup_bw=A100.scaleup_bw)
+#: remote capacity ~55% of the trace's unique-chain working set (~113 GB),
+#: so eviction is live and hit rates are capacity-bounded
+KV_REMOTE_CAP = 64e9
+
+
+def _kvstore_spec(remote_cap: float = KV_REMOTE_CAP) -> KVStoreSpec:
+    # per-unit tiers deliberately smaller than the per-unit working-set
+    # share so all three tiers serve hits and LRU eviction is live
+    return KVStoreSpec(
+        block_tokens=256, pooled_nodes=2, wb_deadline_scale=8.0,
+        tiers=(TierSpec("hbm", capacity=2e9),
+               TierSpec("dram", capacity=4e9, fetch_bw=12e9,
+                        scope="unit", writeback=True),
+               TierSpec("remote", capacity=remote_cap, fetch_bw=6.25e9,
+                        scope="pooled", writeback=True)))
+
+
+def _spec_kv(kv: Optional[KVStoreSpec]) -> ClusterSpec:
+    kw = dict(KV_SPEC)
+    model = PAPER_MODELS[kw.pop("model")]
+    return ClusterSpec(model=model, par=ParallelismSpec(mode="sp", sp=KV_SP),
+                       decode_ratio=KV_DECODE_RATIO, hw=KV_HW, kvstore=kv,
+                       **kw)
 
 
 def _decode_spec(rebalance: bool) -> DecodeSpec:
@@ -219,6 +273,92 @@ def main(quick: bool = False):
         emit(rows, f"largescale.decode.mfs_over_{p}", f"{r:.2f}",
              f"TTFT attainment ratio at rps{dec_rates[-1]:g}, d2d on")
     result["decode"] = dec
+
+    # ---- KV-reuse sweep: Mooncake tail over the tiered store, on vs off --
+    # store_off is the legacy pre-sampled-reuse model (static owner oracle);
+    # store_on resolves hits against the live tiered store, S1 is
+    # multi-source and admission emits Stage-WB writebacks. Reported per
+    # policy: TTFT attainment, live hit rate, per-tier hit mix, and the WB
+    # class share on contended links (MFS defers WB below D2D — the
+    # deadline-chasing/fair-sharing baselines hand it bandwidth).
+    n_kv = 120 if quick else N_KV
+    kv_rates = KV_RATES[-1:] if quick else KV_RATES
+    kvd = {"spec": KV_SPEC, "workload": KV_WORKLOAD, "sp": KV_SP,
+           "hw": KV_HW.name, "decode_ratio": KV_DECODE_RATIO,
+           "rates": list(kv_rates), "n_requests": n_kv,
+           "remote_cap": KV_REMOTE_CAP,
+           "ttft": {}, "hit_rate": {}, "tier_mix": {}, "wb_share": {},
+           "wb_bytes": {}, "evictions": {}}
+    for mode, kv in (("store_on", _kvstore_spec()), ("store_off", None)):
+        ttft: Dict[str, List[float]] = {p: [] for p in POLICIES}
+        hitr: Dict[str, List[float]] = {p: [] for p in POLICIES}
+        tmix: Dict[str, List[Dict]] = {p: [] for p in POLICIES}
+        wbsh: Dict[str, List[float]] = {p: [] for p in POLICIES}
+        wbby: Dict[str, List[float]] = {p: [] for p in POLICIES}
+        evc: Dict[str, List[float]] = {p: [] for p in POLICIES}
+        for rate in kv_rates:
+            trace = generate_trace(WORKLOADS[KV_WORKLOAD], n_kv, rps=rate,
+                                   seed=0, warmup=24,
+                                   arrival=ArrivalSpec(process="mmpp"))
+            for pol in POLICIES:
+                sim = ClusterSim(_spec_kv(kv), make_policy(pol))
+                t0 = time.time()
+                s = sim.run(trace).summary()
+                ttft[pol].append(s["slo_attainment"])
+                # store-off arms get null (not NaN — bare NaN is invalid
+                # strict JSON and breaks non-Python artifact consumers)
+                hitr[pol].append(s.get("kv_hit_rate"))
+                tmix[pol].append(s.get("kv_tier_mix", {}))
+                wbsh[pol].append(s.get("kv_wb_share_contended"))
+                wbby[pol].append(s.get("kv_wb_bytes", 0.0))
+                evc[pol].append(s.get("kv_evictions", 0.0))
+                assert len(sim.runtime.flows) == 0, "runtime leaked flows"
+                mix = s.get("kv_tier_mix") or {}
+                emit(rows, f"largescale.kvreuse.{mode}.{pol}.rps{rate:g}",
+                     f"{s['slo_attainment']:.4f}",
+                     f"hit={s.get('kv_hit_rate', float('nan')):.3f} "
+                     f"tiers=" + "/".join(f"{t}:{v:.2f}"
+                                          for t, v in mix.items())
+                     + f" wb_share={s.get('kv_wb_share_contended', float('nan')):.3f}"
+                     f" wall={time.time() - t0:.0f}s")
+        kvd["ttft"][mode] = ttft
+        kvd["hit_rate"][mode] = hitr
+        kvd["tier_mix"][mode] = tmix
+        kvd["wb_share"][mode] = wbsh
+        kvd["wb_bytes"][mode] = wbby
+        kvd["evictions"][mode] = evc
+    # hit rate must respond to store capacity: MFS at 1/4 pooled capacity
+    trace = generate_trace(WORKLOADS[KV_WORKLOAD], n_kv, rps=kv_rates[-1],
+                           seed=0, warmup=24,
+                           arrival=ArrivalSpec(process="mmpp"))
+    s = ClusterSim(_spec_kv(_kvstore_spec(remote_cap=KV_REMOTE_CAP / 4)),
+                   make_policy("mfs")).run(trace).summary()
+    kvd["capacity_response"] = {
+        "remote_cap": KV_REMOTE_CAP / 4, "hit_rate": s["kv_hit_rate"],
+        "full_cap_hit_rate": kvd["hit_rate"]["store_on"]["mfs"][-1]}
+    emit(rows, "largescale.kvreuse.capacity_response",
+         f"{s['kv_hit_rate']:.3f} -> "
+         f"{kvd['capacity_response']['full_cap_hit_rate']:.3f}",
+         "hit rate at 1/4 vs full pooled capacity, mfs, top rate")
+    # WB deferral: mean WB class share on contended links across rates —
+    # lower under MFS (own band below D2D) than under FS/EDF
+    kvd["wb_share_mean"] = {
+        p: (sum(v for v in kvd["wb_share"]["store_on"][p]
+                if v is not None) / max(len(kv_rates), 1))
+        for p in POLICIES}
+    for p in POLICIES:
+        emit(rows, f"largescale.kvreuse.wb_share.{p}",
+             f"{kvd['wb_share_mean'][p]:.3f}",
+             "mean WB share on contended links, store on")
+    # MFS's TTFT advantage with the store on, at the top contended rate
+    top = kvd["ttft"]["store_on"]
+    kvd["mfs_ttft_ratio_at_top"] = {
+        p: top["mfs"][-1] / max(top[p][-1], 1e-9)
+        for p in POLICIES if p != "mfs"}
+    for p, r in sorted(kvd["mfs_ttft_ratio_at_top"].items()):
+        emit(rows, f"largescale.kvreuse.mfs_over_{p}", f"{r:.2f}",
+             f"TTFT attainment ratio at rps{kv_rates[-1]:g}, store on")
+    result["kvreuse"] = kvd
 
     with open(OUT_JSON, "w") as fh:
         json.dump(result, fh, indent=2)

@@ -178,6 +178,54 @@ def _bench_warmstart(rows, n_flows: int = 512, n_events: int = 300):
          "exact float equality vs cold fills, every epoch")
 
 
+def _bench_kvstore(rows, quick: bool = False):
+    """KV-reuse plane microbenches: chain-index resolve+admit throughput on
+    a roomy store (``kvstore.index.*``) and admission throughput under
+    LRU eviction churn when the tiers are an order of magnitude too small
+    for the working set (``kvstore.evict.*``)."""
+    from repro.core.kvstore import (KVStore, KVStoreSpec, TierSpec,
+                                    chain_keys, kv_route)
+    from repro.simcluster.trace import WORKLOADS, generate_trace
+
+    n = 500 if quick else 2000
+    trace = generate_trace(WORKLOADS["qwen-agent"], n, rps=100.0, seed=0)
+    bt = 256
+
+    class _It:
+        pass
+
+    def drive(hbm_cap, remote_cap):
+        store = KVStore(
+            KVStoreSpec(block_tokens=bt, tiers=(
+                TierSpec("hbm", capacity=hbm_cap),
+                TierSpec("remote", capacity=remote_cap, fetch_bw=24e9,
+                         scope="pooled", writeback=True))),
+            bytes_per_token=1e5, unit_eps=[[0], [1], [2], [3]],
+            store_eps=[8], nic_bw=25e9)
+        backlogs = [0.0, 0.0, 0.0, 0.0]
+        t0 = time.perf_counter()
+        for r in trace:
+            keys = chain_keys(r.prefix_chain, bt)
+            u, _ = kv_route(store, keys, r.prompt_len - 1, backlogs, r.rid)
+            it = _It()
+            it.rid, it.unit, it.n_tokens = r.rid, u, r.prompt_len
+            for f in store.admit(it, 0.0):
+                store.on_wb_done(f)
+        return time.perf_counter() - t0, store
+
+    blk_bytes = bt * 1e5
+    dt, store = drive(1e15, 1e15)              # no eviction pressure
+    emit(rows, "kvstore.index.ops_per_sec", f"{2 * n / dt:.0f}",
+         f"{n} requests resolve+admit, hit_rate="
+         f"{store.summary()['hit_rate_tokens']:.3f}")
+    dt2, store2 = drive(8 * blk_bytes, 24 * blk_bytes)    # heavy churn
+    emit(rows, "kvstore.evict.ops_per_sec", f"{2 * n / dt2:.0f}",
+         "tiers far under the chain working set")
+    emit(rows, "kvstore.evict.evictions_per_admit",
+         f"{store2.stats['evictions'] / max(store2.stats['admitted_blocks'], 1):.3f}",
+         f"{store2.stats['evictions']:.0f} evictions")
+
+
 def main(quick: bool = False):
     rows = []
     _fig(rows, "fig6_ingress", coll_size=2.0, p2d_size=1.0)   # T=3 -> T=2
@@ -201,6 +249,7 @@ def main(quick: bool = False):
     _bench_waterfill(rows, reps=5 if quick else 20)
     _bench_incremental(rows, n_events=100 if quick else 400)
     _bench_warmstart(rows, n_events=100 if quick else 300)
+    _bench_kvstore(rows, quick=quick)
     return rows
 
 

@@ -12,6 +12,8 @@ Public surface:
     GroupPlan, StageProfile, StageEmitter — shared stage-emission layer (§3.1)
     DecodePlane, DecodeSpec        — decode plane: pools, TPOT tracking,
                                      D2D KV-migration rebalancing
+    KVStore, KVStoreSpec, TierSpec — KV-reuse plane: shared tiered prefix
+                                     store, live hits, Stage-WB writebacks
     MsFlowRuntime, RuntimeHost     — shared orchestration runtime (§5)
 """
 from .msflow import Stage, Flow, Coflow, FlowState, new_flow_id
@@ -34,6 +36,8 @@ from .stages import (ParallelismSpec, GroupPlan, StageProfile, PrefillItem,
                      BatchState, StageEmitter)
 from .decode import (DecodePoolSpec, DecodeSpec, DecodeSession, DecodePlane,
                      partition_pools)
+from .kvstore import (TierSpec, KVStoreSpec, HitSegment, HitPlan, KVStore,
+                      kv_route, chain_keys, content_chain)
 from .runtime import MsFlowRuntime, RuntimeHost, RuntimeView
 
 __all__ = [
@@ -49,5 +53,7 @@ __all__ = [
     "BatchState", "StageEmitter",
     "DecodePoolSpec", "DecodeSpec", "DecodeSession", "DecodePlane",
     "partition_pools",
+    "TierSpec", "KVStoreSpec", "HitSegment", "HitPlan", "KVStore",
+    "kv_route", "chain_keys", "content_chain",
     "MsFlowRuntime", "RuntimeHost", "RuntimeView",
 ]

@@ -17,6 +17,11 @@ Per-stage rules
   equal level it sits in a band *below* P2D and is barred from the level-1
   critical reservation — rebalancing is the first traffic overload control
   defers when tight-TTFT P2D needs the downlink.
+* WB (KV-store writeback/replication, loose derived deadline): same MLU
+  ladder and tick-driven re-evaluation, one band *below even D2D* and also
+  barred from level 1 — background replication is the very last thing that
+  may touch a contended link; it only promotes as its own loose deadline
+  actually runs out.
 
 Arbitration (§4.5)
 ------------------
@@ -32,7 +37,7 @@ Priority-key layout (lexicographic, smaller = more urgent):
     (level, band, red_rank)
       level    1..K from the RMLQ, K+1 = scavenger
       band     0 = early-stage (Stages 1-2), 1 = last-stage (Stage 3),
-               2 = decode-plane D2D rebalancing
+               2 = decode-plane D2D rebalancing, 3 = KV-store writeback
       red_rank rank of the owning batch in sigma (0 when unused)
 """
 from __future__ import annotations
@@ -69,11 +74,12 @@ class MFSScheduler(Policy):
 
     # ------------------------------------------------------------ promotion
     def _target_level(self, flow: Flow, view: SchedView) -> int:
-        if flow.stage in (Stage.P2D, Stage.D2D):
-            # D2D rebalancing enters the RMLQ with its own laxity: the same
-            # MLU ladder over its derived next-token deadline, so a migration
-            # promotes only as its destination's TPOT budget actually runs
-            # out (deferred otherwise — P2D wins the tie via the band)
+        if flow.stage in (Stage.P2D, Stage.D2D, Stage.WB):
+            # D2D rebalancing and KV-store writebacks enter the RMLQ with
+            # their own laxity: the same MLU ladder over their derived
+            # deadlines (next-token TPOT budget / loose replication slack),
+            # so they promote only as that budget actually runs out
+            # (deferred otherwise — P2D wins the tie via the band)
             lvl = min(flow.level, self.cfg.K)
             try:
                 cap, rho = view.mlu_inputs(flow, lvl)
@@ -102,10 +108,11 @@ class MFSScheduler(Policy):
                 self.rmlq.insert(f, self._target_level(f, view))
             if self._should_reevaluate(f, view, kind, unit):
                 self.rmlq.promote(f, self._target_level(f, view))
-            # band: early stages (1-2) > last-stage P2D > D2D rebalancing —
-            # at equal level, loose-SLO decode migration is the first thing
+            # band: early stages (1-2) > last-stage P2D > D2D rebalancing >
+            # KV-store writeback — at equal level, loose-SLO decode
+            # migration and background replication are the first things
             # overload control defers in favor of tight-TTFT P2D
-            band = {Stage.P2D: 1, Stage.D2D: 2}.get(f.stage, 0)
+            band = {Stage.P2D: 1, Stage.D2D: 2, Stage.WB: 3}.get(f.stage, 0)
             red = view.red_rank(f.rid)
             f.priority_key = (f.level, band, red)
             f.rate_cap = None
@@ -120,7 +127,7 @@ class MFSScheduler(Policy):
                 # atomicity at message level, no packet re-ordering)
                 return kind == "layer" and unit == f.unit
             return kind == "tick"           # fixed-interval updates afterwards
-        if f.stage == Stage.D2D:
+        if f.stage in (Stage.D2D, Stage.WB):
             return kind == "tick"           # no layer boundaries to ride
         if f.stage == Stage.KV_REUSE:
             return kind == "layer" and unit == f.unit

@@ -84,6 +84,16 @@ class DecodeSpec:
     release_delta: int = 1       # hysteresis low-water (stop migrating)
     max_inflight: int = 2        # concurrent D2D migrations per pool
     min_migrate_remaining: int = 4   # don't migrate nearly-finished sessions
+    # --- decode-side overload eviction (the Algorithm-1 decode loop) ---
+    # When an in-flight migration's derived deadline goes infeasible (the
+    # remaining KV cannot arrive in time even at the bottleneck's full
+    # capacity), the plane abandons the D2D and releases its slots; loose
+    # sessions spill to the bulk pool (``spill_pool``, or the loosest-budget
+    # pool when empty), non-loose sessions re-queue on their source
+    # endpoint, and loose sessions with nowhere to spill are evicted for
+    # good (their KV blocks are released back through the KV store).
+    auto_evict: bool = False
+    spill_pool: str = ""
 
 
 def partition_pools(pools: Sequence[DecodePoolSpec],
@@ -126,6 +136,10 @@ class DecodeSession:
     n_migrations: int = 0
     migrate_dst: int = -1
     d2d_fid: int = -1
+    no_migrate: bool = False     # set after an abandoned migration so the
+    #                              rebalancer cannot immediately re-pick it;
+    #                              cleared once the session makes token
+    #                              progress (conditions have changed)
     payload: Any = None          # the host's request object, if it wants one
 
     @property
@@ -189,7 +203,8 @@ class DecodePlane:
         self._state_b = profile.model.state_bytes(profile.kv_dtype_bytes)
         self._G = len(profile.plan)
         self.stats = {"admitted": 0, "finished": 0, "tokens": 0, "steps": 0,
-                      "migrations": 0, "d2d_bytes": 0.0, "evicted": 0}
+                      "migrations": 0, "d2d_bytes": 0.0, "evicted": 0,
+                      "abandoned": 0, "spilled": 0, "dropped": 0}
         self.trace = trace
         self.event_log: Deque[Tuple] = deque(maxlen=100_000)
 
@@ -199,6 +214,13 @@ class DecodePlane:
     def _log(self, kind: str, rid: int, ep: int, t: float, extra: int = 0) -> None:
         if self.trace:
             self.event_log.append((kind, rid, ep, extra, t))
+
+    def _release_kv(self, rid: int) -> None:
+        """Release the request's KV-store pins (held through decode so the
+        live session's prefix blocks cannot be evicted from under it)."""
+        kv = getattr(self.rt, "kvstore", None) if self.rt is not None else None
+        if kv is not None:
+            kv.release(rid)
 
     # ------------------------------------------------------------ pool routing
     def pick_pool(self, item: Any) -> str:
@@ -262,6 +284,7 @@ class DecodePlane:
             sess.state = "done"
             sess.finished = now
             self.stats["finished"] += 1
+            self._release_kv(sess.rid)
             if self.rt is not None:
                 self.rt.host.on_decode_done(sess)
             return 0
@@ -317,6 +340,7 @@ class DecodePlane:
             sess.gap_max = max(sess.gap_max, gap)
             sess.last_token = now
             sess.tokens_done += 1
+            sess.no_migrate = False    # progress: migration is an option again
             self.stats["tokens"] += 1
             self._log("token", sess.rid, ep, now, sess.tokens_done)
             if sess.tokens_done >= sess.out_tokens:
@@ -330,6 +354,7 @@ class DecodePlane:
         sess.state = "done"
         sess.finished = now
         self.stats["finished"] += 1
+        self._release_kv(sess.rid)
         self._log("finish", sess.rid, sess.ep, now, sess.tokens_done)
         if self.rt is not None:
             self.rt.host.on_decode_done(sess)
@@ -392,7 +417,7 @@ class DecodePlane:
         best: Optional[DecodeSession] = None
         if self.queued_on[ep]:
             for sess in self.queued[self._pool_of_ep[ep]]:
-                if sess.ep != ep \
+                if sess.ep != ep or sess.no_migrate \
                         or sess.remaining < self.spec.min_migrate_remaining:
                     continue
                 if best is None or (sess.remaining, -sess.rid) \
@@ -401,7 +426,8 @@ class DecodePlane:
             if best is not None:
                 return best
         for sess in self.active[ep].values():
-            if sess.remaining < self.spec.min_migrate_remaining:
+            if sess.no_migrate \
+                    or sess.remaining < self.spec.min_migrate_remaining:
                 continue
             if best is None or (sess.remaining, -sess.rid) > (best.remaining,
                                                               -best.rid):
@@ -460,6 +486,94 @@ class DecodePlane:
             self._enqueue(sess)
         return self._maybe_rebalance(sess.pool, now)
 
+    # ----------------------------------------------- decode-side auto-eviction
+    def auto_evict_enabled(self) -> bool:
+        return self.spec.auto_evict and self.spec.rebalance
+
+    def _spill_target(self, sess: DecodeSession) -> Optional[str]:
+        """Bulk pool loose sessions spill into: the configured
+        ``spill_pool``, or the loosest-TPOT-budget pool besides the
+        session's own."""
+        if self.spec.spill_pool and self.spec.spill_pool in self.pools \
+                and self.spec.spill_pool != sess.pool:
+            return self.spec.spill_pool
+        others = [p for p in self.pools.values() if p.name != sess.pool]
+        if not others:
+            return None
+        return max(others, key=lambda p: p.tpot_budget).name
+
+    def _readmit(self, sess: DecodeSession, pool: str, ep: int,
+                 now: float) -> None:
+        """Put an auto-evicted session back onto the plane (same or spill
+        pool); placement is sticky again from ``ep``."""
+        sess.ep = ep
+        sess.pool = pool
+        sess.migrate_dst = -1
+        sess.d2d_fid = -1
+        sess.no_migrate = True
+        self.sessions[sess.rid] = sess
+        slots = self.pools[pool].slots_per_ep
+        if len(self.active[ep]) + self.incoming[ep] < slots:
+            self._activate(sess, ep, now)
+        else:
+            self._enqueue(sess)
+
+    def auto_evict(self, now: float) -> int:
+        """The TPOT-budget eviction rule closing the Algorithm-1 decode
+        loop: any in-flight migration whose derived deadline has become
+        *infeasible* — the remaining KV cannot arrive by the deadline even
+        at the bottleneck link's full capacity — is abandoned via
+        :meth:`evict` (cancels the D2D, releases the reserved slots). The
+        session is then re-admitted per class: loose sessions spill to the
+        bulk pool (looser budget, fresh sticky placement), other sessions
+        re-queue on their source endpoint, and loose sessions with nowhere
+        to spill are dropped for good — their KV blocks are released back
+        through the KV store. Called from the runtime's periodic tick;
+        returns the number of sessions acted on (callers resched if > 0).
+        """
+        if self.rt is None:
+            return 0
+        acted = 0
+        net = self.rt.net
+        for sess in [s for s in self.sessions.values()
+                     if s.state == "migrating"]:
+            fl = self.rt.flows.get(sess.d2d_fid)
+            if fl is None or fl.deadline is None:
+                continue
+            # exclusive-service ceiling = the route's MINIMUM capacity (the
+            # most-utilised link can be a fat spine; the NIC still caps
+            # actual delivery)
+            route = net.routes.get(fl.fid)
+            if route is None:
+                route = net.topo.route(fl.src, fl.dst, fl.fid)
+            cap = min((net.topo.capacity[l] for l in route), default=2e12)
+            t_rem = fl.deadline - now
+            if t_rem > 0 and fl.remaining <= cap * t_rem:
+                continue                       # still feasible: keep going
+            src = sess.ep                      # KV never left the source
+            cls = getattr(sess.payload, "slo_class", None)
+            self.evict(sess.rid, now)          # abandon D2D + release slots
+            self.stats["evicted"] -= 1         # re-bucketed below
+            self.stats["abandoned"] += 1
+            self._log("abandon", sess.rid, src, now, sess.tokens_done)
+            spill = self._spill_target(sess)
+            if cls == "loose" and spill is not None:
+                rel = (sess.tpot_budget
+                       / max(self.pools[sess.pool].tpot_budget, 1e-12))
+                sess.tpot_budget = self.pools[spill].tpot_budget * rel
+                loads = self._loads(spill)
+                dst = min(loads, key=lambda e: (loads[e], e))
+                self._readmit(sess, spill, dst, now)
+                self.stats["spilled"] += 1
+                self._log("spill", sess.rid, dst, now, src)
+            elif cls != "loose":
+                self._readmit(sess, sess.pool, src, now)
+            else:                              # loose, nowhere to spill:
+                self.stats["evicted"] += 1     # dropped for good (evict()
+                self.stats["dropped"] += 1     # already released its KV pins)
+            acted += 1
+        return acted
+
     # --------------------------------------------------------------- eviction
     def evict(self, rid: int, now: float) -> bool:
         """Hard-evict a decode session (decode-side overload control / host
@@ -488,6 +602,7 @@ class DecodePlane:
                 pass
         sess.state = "evicted"
         self.stats["evicted"] += 1
+        self._release_kv(rid)   # the session's KV blocks return to the store
         self._log("evict", rid, sess.ep, now, sess.tokens_done)
         self._drain_queue(sess.pool, sess.ep, now)
         return True

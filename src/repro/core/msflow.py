@@ -47,6 +47,9 @@ class Stage(IntEnum):
     D2D = 4         # decode plane: KV migration between decode endpoints
     #                 (load rebalancing); implicit deadline derived from the
     #                 destination's next-token (TPOT) budget
+    WB = 5          # KV-reuse plane: writeback/replication of newly produced
+    #                 prefix blocks into slower store tiers; loose derived
+    #                 deadline — the most deferrable traffic class
 
 
 class FlowState(IntEnum):
@@ -89,6 +92,10 @@ class Flow:
     #   rate_cap     — optional ceiling (Karuna-style minimal-rate pacing)
     priority_key: Tuple = (0,)
     rate_cap: Optional[float] = None
+    # Immutable per-tier fetch ceiling set at submission by the KV store
+    # (host-DRAM / pooled-store read path): the fluid model caps the flow at
+    # min(rate_cap, tier_cap), so policies may overwrite rate_cap freely.
+    tier_cap: Optional[float] = None
     # RMLQ bookkeeping: current discrete level (1 = highest priority, K =
     # lowest, K+1 = scavenger). Promotion is monotone: level only decreases.
     level: int = 10**9

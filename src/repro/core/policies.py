@@ -30,6 +30,13 @@ FairShare splits with them evenly. Only the MFS arbiter
 (repro.core.arbiter) is decode-aware: D2D gets its own RMLQ laxity and a
 band below P2D, so overload control defers loose rebalancing first.
 
+KV-reuse plane: Stage.WB writeback/replication flows carry *loose* derived
+deadlines that are nevertheless often nearer than fresh P2D deadlines —
+EDF therefore serves background replication ahead of TTFT-critical
+traffic once it shares a contended uplink, Karuna reserves it a minimal
+rate, FairShare splits with it evenly. MFS holds WB in the band below
+even D2D and promotes it only as its own slack runs out.
+
 The MFS policy itself lives in repro.core.arbiter.
 """
 from __future__ import annotations

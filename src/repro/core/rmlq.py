@@ -121,8 +121,10 @@ class RMLQ:
 
     def _clamp(self, level: int, flow: Flow) -> int:
         # I3: level 1 is reserved for explicit-deadline *completion* (Stage 3)
-        # flows. D2D rebalancing carries a derived deadline too, but it is
-        # deferrable by design (overload control trades it against P2D), so
-        # it never enters the critical reservation.
-        lo = 1 if (flow.explicit_deadline and flow.stage != Stage.D2D) else 2
+        # flows. D2D rebalancing and KV-store writebacks carry derived
+        # deadlines too, but both are deferrable by design (overload control
+        # trades them against P2D), so they never enter the critical
+        # reservation.
+        lo = 1 if (flow.explicit_deadline
+                   and flow.stage not in (Stage.D2D, Stage.WB)) else 2
         return max(lo, min(self.K, level))

@@ -138,7 +138,7 @@ class MsFlowRuntime:
                  slo_mode: str = "per-request", tick_interval: float = 2e-3,
                  drop_budget: int = 32, contention_free: bool = False,
                  trace_stages: bool = False, stage_log_limit: int = 100_000,
-                 decode=None):
+                 decode=None, kvstore=None):
         self.topo = topo
         self.net = net
         self.evq = evq
@@ -158,6 +158,10 @@ class MsFlowRuntime:
         self.decode = decode
         if decode is not None:
             decode.bind(self)
+        #: optional KV-reuse plane (repro.core.kvstore.KVStore) — admission
+        #: on prefill completion emits Stage-WB writeback flows through the
+        #: same _submit primitive, contending with S1/S2/S3/D2D
+        self.kvstore = kvstore
         self.view = RuntimeView(self)
 
         # --- per-unit serving state ---
@@ -414,6 +418,19 @@ class MsFlowRuntime:
         self.red_ranks.pop(item.rid, None)
         self.pruned_rids.discard(item.rid)
         self.host.on_request_done(item, bs)
+        if self.kvstore is not None:
+            # KV-reuse plane admission: the chain's blocks are registered in
+            # the origin tier and loose-deadline Stage-WB replication flows
+            # enter the shared net. Hit pins are released here unless a
+            # decode plane holds the session live past its first token —
+            # then the plane releases them on session finish/eviction.
+            wbs = self.kvstore.admit(item, self.net.now,
+                                     keep_pins=self.decode is not None)
+            for f in wbs:
+                self._submit(f)
+            if wbs:
+                self._resched(("submit",))
+                self._arm_tick()
         if self.decode is not None:
             if self.decode.admit(item, self.net.now):
                 self._resched(("submit",))   # admission triggered D2D flows
@@ -421,6 +438,11 @@ class MsFlowRuntime:
 
     def _on_flow_done(self, f: Flow) -> None:
         self.policy.on_flow_completed(f, self.view)
+        if f.stage == Stage.WB:
+            if self.kvstore is not None:
+                self.kvstore.on_wb_done(f)   # blocks land in the target tier
+            self._evict_flow(f)
+            return
         if f.stage == Stage.D2D:
             if self.decode is not None \
                     and self.decode.on_d2d_done(f, self.net.now):
@@ -468,11 +490,24 @@ class MsFlowRuntime:
 
     def _on_tick(self) -> None:
         self._tick_armed = False
-        # post-compute P2D flows and in-flight D2D migrations both re-evaluate
-        # their MLU level on the periodic tick (no layer boundaries to ride)
+        if self.kvstore is not None:
+            # contended-link class accounting (WB share vs P2D/D2D/S1);
+            # credit at most two tick pitches so idle gaps between bursts
+            # are never attributed to the resuming traffic
+            self.kvstore.sample_contention(self.net, self.net.now,
+                                           max_dt=2 * self.tick_interval)
+        if self.decode is not None and self.decode.auto_evict_enabled():
+            # decode-side Algorithm-1 loop: abandon migrations whose derived
+            # deadline went infeasible (spill/evict per class) — may cancel
+            # and submit flows, so the allocation must refresh
+            if self.decode.auto_evict(self.net.now):
+                self._resched(("tick",))
+        # post-compute P2D flows, in-flight D2D migrations and KV-store
+        # writebacks all re-evaluate their MLU level on the periodic tick
+        # (no layer boundaries to ride)
         post = [f for f in self.net.flows.values()
                 if (f.stage == Stage.P2D and not self.view.computing(f.rid))
-                or f.stage == Stage.D2D]
+                or f.stage in (Stage.D2D, Stage.WB)]
         if post:
             self._resched(("tick",))
             self._arm_tick()

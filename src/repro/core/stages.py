@@ -91,6 +91,11 @@ class PrefillItem:
     n_tokens: int                      # prompt length
     reuse: int = 0                     # reused prefix tokens (Stage 1)
     owner_unit: int = 0                # unit owning the reused prefix
+    # KV-reuse plane: per-tier/per-owner block plan resolved at route time
+    # against live store state (repro.core.kvstore.HitPlan). When set it
+    # supersedes the single-owner (reuse, owner_unit) pair and Stage-1
+    # emission becomes multi-source.
+    hit_plan: Any = None
     slo_scale: float = 0.0             # per-request SLO class scale (0 = use
     #                                    the pool default, then cluster-wide)
     pool: str = ""                     # decode pool ("" = host/plane picks)
@@ -286,31 +291,58 @@ class StageEmitter:
         return eps[g % len(eps)]
 
     # -------------------------------------------------------------- stage 1
+    def _s1_flows(self, bs: BatchState, item: PrefillItem, g: int,
+                  tokens: int, src_eps: Sequence[int],
+                  tier_cap: Optional[float], out: List[Flow]) -> None:
+        """Emit group ``g``'s fetch flow(s) for ``tokens`` reused tokens
+        sourced from ``src_eps`` (sp mode stripes the slice across the
+        destination unit's endpoints, as for single-source fetches)."""
+        G = len(self.plan)
+        size = tokens * self.profile.kv_bytes_group(g)
+        if size <= 0:
+            return
+        if self.par.mode == "sp":
+            ueps = self.unit_eps[bs.unit]
+            dsts = [ueps[(g + i) % len(ueps)] for i in range(self.par.sp)]
+            sizes = [size / self.par.sp] * self.par.sp
+        else:
+            dsts = [self.rank_endpoint(bs, item, g)]
+            sizes = [size]
+        for dst, sz in zip(dsts, sizes):
+            f = Flow(new_flow_id(), item.rid, bs.unit, Stage.KV_REUSE,
+                     sz, src=src_eps[g % len(src_eps)], dst=dst,
+                     target_layer=g, n_layers=G)
+            f.tier_cap = tier_cap
+            bs.s1_pending.setdefault(g, set()).add(f.fid)
+            out.append(f)
+
     def stage1(self, bs: BatchState) -> List[Flow]:
-        """Per-layer-group KV-reuse fetch flows from each item's owner unit."""
+        """Per-layer-group KV-reuse fetch flows.
+
+        With a KV-store hit plan attached the fetch is **multi-source**:
+        each plan segment (a run of blocks resident on one tier/owner)
+        contributes its own per-group flows from that segment's source
+        endpoints, rate-limited at the tier's fetch bandwidth. Without a
+        plan, the legacy single-owner path fetches everything from
+        ``item.owner_unit``.
+        """
         G = len(self.plan)
         out: List[Flow] = []
         for item in bs.items:
+            plan = item.hit_plan
+            if plan is not None and getattr(plan, "segments", None):
+                for seg in plan.segments:
+                    if seg.tokens <= 0:
+                        continue
+                    for g in range(G):
+                        self._s1_flows(bs, item, g, seg.tokens, seg.src_eps,
+                                       seg.tier_cap, out)
+                continue
             if item.reuse <= 0:
                 continue
             src_eps = self.unit_eps[item.owner_unit]
             for g in range(G):
-                size = item.reuse * self.profile.kv_bytes_group(g)
-                if size <= 0:
-                    continue
-                if self.par.mode == "sp":
-                    ueps = self.unit_eps[bs.unit]
-                    dsts = [ueps[(g + i) % len(ueps)] for i in range(self.par.sp)]
-                    sizes = [size / self.par.sp] * self.par.sp
-                else:
-                    dsts = [self.rank_endpoint(bs, item, g)]
-                    sizes = [size]
-                for dst, sz in zip(dsts, sizes):
-                    f = Flow(new_flow_id(), item.rid, bs.unit, Stage.KV_REUSE,
-                             sz, src=src_eps[g % len(src_eps)], dst=dst,
-                             target_layer=g, n_layers=G)
-                    bs.s1_pending.setdefault(g, set()).add(f.fid)
-                    out.append(f)
+                self._s1_flows(bs, item, g, item.reuse, src_eps, None, out)
         return out
 
     # -------------------------------------------------------------- stage 2

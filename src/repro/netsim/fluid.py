@@ -61,6 +61,18 @@ _EPS = 1e-12         # rate/capacity epsilon
 _EPS_BYTES = 1e-4    # a flow with less than this many bytes left is done
 
 
+def _eff_cap(f: Flow) -> Optional[float]:
+    """Effective per-flow ceiling: the policy-assigned ``rate_cap`` combined
+    with the immutable storage-tier fetch ceiling ``tier_cap`` (KV-reuse
+    plane). Policies overwrite ``rate_cap`` every assign; the tier ceiling
+    survives regardless."""
+    if f.tier_cap is None:
+        return f.rate_cap
+    if f.rate_cap is None:
+        return f.tier_cap
+    return min(f.rate_cap, f.tier_cap)
+
+
 class _VecStruct:
     """Warm-started incidence structure for one wide priority group.
 
@@ -259,11 +271,13 @@ class FluidNet:
         down ``residual`` in place. Pure w.r.t. flow state: the caller owns
         rate assignment and link accounting."""
         routed: List[Flow] = []
-        # local (routeless) flows drain immediately at LOCAL_BW
+        # local (routeless) flows drain immediately at LOCAL_BW (or their
+        # per-flow ceiling — a host-local tier writeback pays its tier bw)
         for f in members:
             if not self.routes[f.fid]:
-                rate[f.fid] = LOCAL_BW if f.rate_cap is None \
-                    else min(LOCAL_BW, f.rate_cap)
+                cap = _eff_cap(f)
+                rate[f.fid] = LOCAL_BW if cap is None \
+                    else min(LOCAL_BW, cap)
             else:
                 routed.append(f)
         if len(routed) >= self.VEC_THRESHOLD:
@@ -289,8 +303,9 @@ class FluidNet:
             for lid, n in nflows.items():
                 inc = min(inc, max(0.0, residual[lid]) / n)
             for fid, f in unfrozen.items():
-                if f.rate_cap is not None:
-                    inc = min(inc, f.rate_cap - rate[fid])
+                cap = _eff_cap(f)
+                if cap is not None:
+                    inc = min(inc, cap - rate[fid])
             if inc < 0:
                 inc = 0.0
             if not math.isfinite(inc):
@@ -302,7 +317,8 @@ class FluidNet:
             # freeze: flows at cap, flows crossing a saturated link
             newly_frozen = []
             for fid, f in unfrozen.items():
-                at_cap = f.rate_cap is not None and rate[fid] >= f.rate_cap - _EPS
+                cap = _eff_cap(f)
+                at_cap = cap is not None and rate[fid] >= cap - _EPS
                 saturated = any(residual[lid] <= _EPS for lid in self.routes[fid])
                 if at_cap or saturated:
                     newly_frozen.append(fid)
@@ -392,7 +408,7 @@ class FluidNet:
         struct = self._vec_struct(routed, key)
         lids, lidx, A, AT = struct.lids, struct.lidx, struct.A, struct.AT
         res = np.array([residual[lid] for lid in lids])
-        caps = np.array([math.inf if f.rate_cap is None else f.rate_cap
+        caps = np.array([math.inf if (c := _eff_cap(f)) is None else c
                          for f in routed])
         rates = np.zeros(len(routed))
         active = np.ones(len(routed))

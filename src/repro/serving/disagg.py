@@ -50,6 +50,7 @@ import numpy as np
 from ..core import MFSScheduler, Policy
 from ..core.decode import (DecodePlane, DecodeSession, DecodeSpec,
                            partition_pools)
+from ..core.kvstore import KVStore, KVStoreSpec, content_chain, kv_route
 from ..core.runtime import MsFlowRuntime, RuntimeHost
 from ..core.stages import (BatchState, GroupPlan, ParallelismSpec,
                            PrefillItem, StageEmitter, StageProfile)
@@ -107,6 +108,11 @@ class DisaggConfig:
     drop_budget: int = 32           # Algorithm 1 global drop budget B
     n_decode_units: int = 1         # modeled decode endpoints (pools split these)
     decode: Optional[DecodeSpec] = None   # attach the modeled decode plane
+    # KV-reuse plane: with a spec attached, scheduling truth (reuse length,
+    # sources, tiers) comes from the shared tiered KVStore — the
+    # content-addressed PrefixIndex stays the *data-plane* page map that
+    # materialises real prefix caches when it can cover the modeled hit.
+    kvstore: Optional[KVStoreSpec] = None
 
 
 @dataclass
@@ -132,7 +138,9 @@ class DisaggServer(RuntimeHost):
 
         n_prefill = cfg.n_prefill_units * cfg.gpus_per_unit
         n_decode = max(1, cfg.n_decode_units)
-        self.topo = SingleToR(n_prefill + n_decode, nic_bw=cfg.hw.nic_bw,
+        n_store = cfg.kvstore.n_store_nodes() if cfg.kvstore else 0
+        self.topo = SingleToR(n_prefill + n_decode + n_store,
+                              nic_bw=cfg.hw.nic_bw,
                               gpus_per_server=cfg.gpus_per_unit,
                               scaleup_bw=cfg.hw.scaleup_bw)
         mcfg = model.cfg
@@ -147,6 +155,22 @@ class DisaggServer(RuntimeHost):
                                (u + 1) * cfg.gpus_per_unit))
                     for u in range(cfg.n_prefill_units)]
         decode_eps = list(range(n_prefill, n_prefill + n_decode))
+        store_eps = list(range(n_prefill + n_decode,
+                               n_prefill + n_decode + n_store))
+        self.kvstore: Optional[KVStore] = None
+        if cfg.kvstore is not None:
+            if cfg.kvstore.block_tokens % cfg.page_size:
+                raise ValueError("kvstore.block_tokens must be a multiple of"
+                                 " page_size so block-aligned hits are valid"
+                                 " paged-cache resume points")
+            pooled = cfg.kvstore.pooled_tier()
+            if pooled is not None and pooled.fetch_bw > 0:
+                for e in store_eps:
+                    self.topo.capacity[2 * e] = pooled.fetch_bw
+                    self.topo.capacity[2 * e + 1] = pooled.fetch_bw
+            self.kvstore = KVStore(
+                cfg.kvstore, self.profile.kv_bytes_per_token(),
+                unit_eps, store_eps, nic_bw=cfg.hw.nic_bw)
         self.decode_plane: Optional[DecodePlane] = None
         pool_eps = None
         if cfg.decode is not None:
@@ -161,7 +185,8 @@ class DisaggServer(RuntimeHost):
             self.profile, emitter, host=self, n_units=cfg.n_prefill_units,
             max_batch_tokens=cfg.max_batch_tokens, slo_scale=cfg.slo_scale,
             slo_mode="per-request", tick_interval=cfg.tick_interval,
-            drop_budget=cfg.drop_budget, decode=self.decode_plane)
+            drop_budget=cfg.drop_budget, decode=self.decode_plane,
+            kvstore=self.kvstore)
 
         self.engines = [ServingEngine(model, params)
                         for _ in range(cfg.n_prefill_units)]
@@ -183,9 +208,27 @@ class DisaggServer(RuntimeHost):
 
     # ------------------------------------------------------------ host hooks
     def route(self, item: PrefillItem) -> int:
-        """KV-aware routing: prefix affinity vs. per-unit token backlog."""
+        """KV-aware routing: prefix affinity vs. per-unit token backlog.
+
+        With the KV-reuse plane attached, the hit (length, sources, tiers)
+        resolves against the live shared store at route time via the same
+        :func:`repro.core.kvstore.kv_route` the simulator uses; the
+        PrefixIndex entry is kept only as the data-plane capability that
+        materialises real pages for the modeled hit.
+        """
         job: _ServeJob = item.payload
         entry = self.index.match(job.req.tokens)
+        if self.kvstore is not None:
+            keys = content_chain(job.req.tokens,
+                                 self.kvstore.spec.block_tokens)
+            unit, plan = kv_route(self.kvstore, keys,
+                                  len(job.req.tokens) - 1,
+                                  self.runtime.backlog_tokens, item.rid)
+            job.entry = entry
+            item.reuse = plan.tokens
+            item.hit_plan = plan
+            item.owner_unit = unit
+            return unit
         reuse = entry.n_tokens if entry else 0
         if reuse >= len(job.req.tokens):    # guarantee >=1 suffix token
             reuse, entry = 0, None
@@ -210,13 +253,30 @@ class DisaggServer(RuntimeHost):
         # later pruned — only the clock pays the recompute penalty then.
         for it in bs.items:
             job: _ServeJob = it.payload
-            prefix_cache = self.index.fetch(job.entry) \
-                if job.entry is not None else None
+            prefix_cache = self._prefix_cache_for(job.entry, it.reuse)
             first, cache, _ = self.engines[bs.unit].prefill(
                 job.req.tokens, prefix_cache=prefix_cache,
-                prefix_len=it.reuse, extra=job.req.extra)
+                prefix_len=it.reuse if prefix_cache is not None else 0,
+                extra=job.req.extra)
             job.first_token = first
             job.cache = cache
+
+    def _prefix_cache_for(self, entry: Any, reuse: int) -> Optional[Any]:
+        """Materialise a prefix cache covering exactly ``reuse`` tokens.
+
+        The modeled hit (KV store) and the data-plane capability
+        (PrefixIndex) can disagree — the store evicts, the index does not —
+        so paged entries are sliced down to the modeled hit and anything
+        the index cannot cover is recomputed by the real prefill (results
+        stay exact; the virtual clock already charged the modeled hit).
+        """
+        if entry is None or reuse <= 0:
+            return None
+        if entry.n_tokens == reuse:
+            return self.index.fetch(entry)
+        if entry.pages and entry.n_tokens > reuse:
+            return self.store.gather(entry.pages, reuse)
+        return None                     # snapshot mismatch: recompute fully
 
     def on_request_done(self, item: PrefillItem, bs: BatchState) -> None:
         job: _ServeJob = item.payload

@@ -53,6 +53,11 @@ class SimMetrics:
     tbt_max: Dict[int, float] = field(default_factory=dict)   # worst gap
     tpot_budget: Dict[int, float] = field(default_factory=dict)
     decode_stats: Dict[str, float] = field(default_factory=dict)
+    # --- KV-reuse plane (empty when no KVStore is attached) ---
+    kv_hit_tokens: Dict[int, int] = field(default_factory=dict)
+    kv_prompt_tokens: Dict[int, int] = field(default_factory=dict)
+    kv_tier_tokens: Dict[str, int] = field(default_factory=dict)
+    kvstore_stats: Dict[str, float] = field(default_factory=dict)
 
     # ------------------------------------------------------------- summaries
     def _rids(self):
@@ -145,6 +150,22 @@ class SimMetrics:
                 "tbt_max": float(max((g for r, g in self.tbt_max.items()
                                       if r >= 0), default=0.0))}
 
+    # ------------------------------------------------------- KV-reuse plane
+    def kv_hit_rate(self) -> float:
+        """Reused tokens / prompt tokens over measured (non-warmup)
+        requests — the live-store hit rate the sweeps report."""
+        tot = sum(self.kv_prompt_tokens.values())
+        if not tot:
+            return float("nan")
+        return sum(self.kv_hit_tokens.values()) / tot
+
+    def kv_tier_mix(self) -> Dict[str, float]:
+        """Share of hit tokens served per storage tier."""
+        tot = sum(self.kv_tier_tokens.values())
+        if not tot:
+            return {}
+        return {t: v / tot for t, v in sorted(self.kv_tier_tokens.items())}
+
     def summary(self) -> Dict[str, float]:
         s = {"policy": self.policy, "n": len(self._rids()),
              "slo_attainment": self.slo_attainment(),
@@ -158,4 +179,8 @@ class SimMetrics:
             s["tpot_by_pool"] = self.tpot_attainment_by_pool()
             s.update({f"tpot_{k}": v for k, v in self.tpot_stats().items()})
             s.update({f"decode_{k}": v for k, v in self.decode_stats.items()})
+        if self.kv_prompt_tokens:   # KV-reuse plane attached
+            s["kv_hit_rate"] = self.kv_hit_rate()
+            s["kv_tier_mix"] = self.kv_tier_mix()
+            s.update({f"kv_{k}": v for k, v in self.kvstore_stats.items()})
         return s

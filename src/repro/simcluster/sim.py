@@ -34,6 +34,7 @@ from ..configs.base import ArchConfig
 from ..core import Coflow, Policy
 from ..core.decode import (DecodePlane, DecodeSession, DecodeSpec,
                            partition_pools)
+from ..core.kvstore import KVStore, KVStoreSpec, chain_keys, kv_route
 from ..core.runtime import MsFlowRuntime, RuntimeHost
 from ..core.stages import (BatchState, GroupPlan, ParallelismSpec,
                            PrefillItem, StageEmitter, StageProfile)
@@ -42,7 +43,8 @@ from .hw import HW, A100
 from .metrics import CoflowRecord, SimMetrics
 from .trace import Request
 
-__all__ = ["ParallelismSpec", "ClusterSpec", "ClusterSim", "DecodeSpec"]
+__all__ = ["ParallelismSpec", "ClusterSpec", "ClusterSim", "DecodeSpec",
+           "KVStoreSpec"]
 
 
 @dataclass
@@ -67,6 +69,12 @@ class ClusterSpec:
     # decode plane (None = legacy behavior: requests end at the first token
     # and the sim is bit-identical to pre-decode-plane runs)
     decode: Optional[DecodeSpec] = None
+    # KV-reuse plane (None = legacy behavior: the trace's pre-sampled
+    # reuse_len + static prefix_id%n_units owner, bit-identical to
+    # pre-kvstore runs). With a spec attached, hits resolve at route time
+    # against the live tiered store, S1 becomes multi-source, and prefill
+    # completion emits Stage-WB writeback flows.
+    kvstore: Optional[KVStoreSpec] = None
 
     def n_groups(self) -> int:
         if self.layer_groups:
@@ -86,7 +94,8 @@ class ClusterSim(RuntimeHost):
         par = spec.par
         n_prefill = spec.n_units * par.gpus
         n_decode = int(math.ceil(n_prefill * spec.decode_ratio))
-        total = n_prefill + n_decode
+        n_store = spec.kvstore.n_store_nodes() if spec.kvstore else 0
+        total = n_prefill + n_decode + n_store
         if spec.topology == "tor":
             self.topo: Topology = SingleToR(
                 total, nic_bw=spec.hw.nic_bw,
@@ -107,7 +116,20 @@ class ClusterSim(RuntimeHost):
             gpus_per_server=spec.gpus_per_server)
         unit_eps = [list(range(u * par.gpus, (u + 1) * par.gpus))
                     for u in range(spec.n_units)]
-        decode_eps = list(range(n_prefill, total))
+        decode_eps = list(range(n_prefill, n_prefill + n_decode))
+        store_eps = list(range(n_prefill + n_decode, total))
+        self.kvstore: Optional[KVStore] = None
+        if spec.kvstore is not None:
+            pooled = spec.kvstore.pooled_tier()
+            if pooled is not None and pooled.fetch_bw > 0:
+                # the pooled tier's nodes expose its fetch bandwidth as
+                # their NIC capacity (store egress/ingress bound)
+                for e in store_eps:
+                    self.topo.capacity[2 * e] = pooled.fetch_bw
+                    self.topo.capacity[2 * e + 1] = pooled.fetch_bw
+            self.kvstore = KVStore(
+                spec.kvstore, self.profile.kv_bytes_per_token(),
+                unit_eps, store_eps, nic_bw=spec.hw.nic_bw)
         self.decode_plane: Optional[DecodePlane] = None
         pool_eps = None
         if spec.decode is not None:
@@ -122,7 +144,7 @@ class ClusterSim(RuntimeHost):
             max_batch_tokens=spec.max_batch_tokens, slo_scale=spec.slo_scale,
             slo_mode=spec.slo_mode, tick_interval=spec.tick_interval,
             drop_budget=spec.drop_budget, contention_free=contention_free,
-            decode=self.decode_plane)
+            decode=self.decode_plane, kvstore=self.kvstore)
         self.metrics = SimMetrics(policy=policy.name)
 
     # kept as properties so tooling (and tests) can poke at the shared state
@@ -135,14 +157,24 @@ class ClusterSim(RuntimeHost):
         return self.runtime.view
 
     # ------------------------------------------------------------ host hooks
-    def _owner_unit(self, prefix_id: int) -> int:
-        return prefix_id % self.spec.n_units
-
     def route(self, item: PrefillItem) -> int:
         # pool selection rides on routing: the runtime fills ``item.pool``
         # via ``DecodePlane.pick_pool`` right after this hook returns (class
         # pinning, then weighted rid hash); a host that wants custom
         # placement just sets ``item.pool`` here and the runtime keeps it
+        if self.kvstore is not None:
+            # KV-reuse plane: resolve the hit against live store state NOW
+            # and route by hit-weighted affinity vs. backlog — the static
+            # prefix_id%n_units owner oracle is gone on this path
+            r: Request = item.payload
+            keys = chain_keys(r.prefix_chain,
+                              self.kvstore.spec.block_tokens)
+            unit, plan = kv_route(self.kvstore, keys, item.n_tokens - 1,
+                                  self.runtime.backlog_tokens, item.rid)
+            item.reuse = plan.tokens
+            item.hit_plan = plan
+            item.owner_unit = unit
+            return unit
         owner = item.owner_unit
         best, best_score = 0, -math.inf
         for u in range(self.spec.n_units):
@@ -163,6 +195,12 @@ class ClusterSim(RuntimeHost):
         self.metrics.deadline[r.rid] = item.deadline - item.arrival
         self.metrics.ideal_ttft[r.rid] = item.ideal_ttft
         self.metrics.slo_class[r.rid] = r.slo_class
+        if item.hit_plan is not None and r.rid >= 0:
+            self.metrics.kv_hit_tokens[r.rid] = item.hit_plan.tokens
+            self.metrics.kv_prompt_tokens[r.rid] = item.n_tokens
+            for tier, tok in item.hit_plan.tier_tokens().items():
+                self.metrics.kv_tier_tokens[tier] = \
+                    self.metrics.kv_tier_tokens.get(tier, 0) + tok
 
     def on_batch_started(self, bs: BatchState) -> None:
         for it in bs.items:
@@ -197,9 +235,13 @@ class ClusterSim(RuntimeHost):
             # Requests carry runtime state; copy so one trace can be replayed
             # across policies/seeds without cross-contamination.
             r = copy.copy(r)
+            # legacy (store-off) reuse model: pre-sampled reuse_len + static
+            # modulo owner; with the KV-reuse plane attached, route()
+            # overrides both from the live store
             items.append(PrefillItem(
                 rid=r.rid, arrival=r.arrival, n_tokens=r.prompt_len,
-                reuse=r.reuse_len, owner_unit=self._owner_unit(r.prefix_id),
+                reuse=r.reuse_len,
+                owner_unit=r.prefix_id % self.spec.n_units,
                 slo_scale=getattr(r, "slo_scale", 0.0),
                 out_tokens=getattr(r, "out_len", 0), payload=r))
         self.runtime.calibrate_slo(items)
@@ -209,4 +251,6 @@ class ClusterSim(RuntimeHost):
         self.metrics.pruned = self.runtime.n_pruned
         if self.decode_plane is not None:
             self.metrics.decode_stats = self.decode_plane.summary()
+        if self.kvstore is not None:
+            self.metrics.kvstore_stats = self.kvstore.summary()
         return self.metrics

@@ -39,7 +39,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 __all__ = ["Request", "WorkloadSpec", "ArrivalSpec", "WORKLOADS",
-           "SLO_CLASSES", "generate_trace"]
+           "SLO_CLASSES", "generate_trace", "prefix_chain"]
 
 
 @dataclass
@@ -49,6 +49,12 @@ class Request:
     prompt_len: int
     reuse_len: int
     prefix_id: int
+    # hierarchical prefix chain ((node_id, tokens), ...) — the reusable
+    # prefix as a path through the workload's prefix tree, so requests
+    # sharing ancestors share the chain's leading segments (partial-prefix
+    # hits in the KV-reuse plane). Derived deterministically from
+    # (prefix_id, reuse_len): no extra RNG draws, traces stay bit-identical.
+    prefix_chain: tuple = ()
     # multi-tenant SLO class (0.0 = defer to the cluster-wide slo_scale)
     slo_class: str = "standard"
     slo_scale: float = 0.0
@@ -76,6 +82,13 @@ class WorkloadSpec:
     mean_out: int = 256        # decode output length (lognormal mean)
     out_sigma: float = 0.8     # lognormal shape for output lengths
     max_out: int = 0           # 0 = 8x mean_out
+    # prefix-tree shape for the KV-reuse plane: prefix ``p``'s reusable
+    # tokens follow its lineage root->...->p (parent(p) = (p-1)//branch);
+    # every ancestor contributes ``chain_node_tokens`` tokens, the leaf
+    # takes the remainder — so siblings share exactly their ancestors'
+    # token spans (partial-prefix hits)
+    chain_branch: int = 4
+    chain_node_tokens: int = 512
 
 
 @dataclass(frozen=True)
@@ -103,7 +116,46 @@ WORKLOADS = {
     "mooncake-agent": WorkloadSpec("mooncake-agent", mean_prompt=9216,
                                    reuse_mean=0.65, zipf_a=1.6, sigma=0.5,
                                    n_prefixes=32),
+    # Mooncake long-context tail: ~22k-token prompts with a heavy upper
+    # tail (sigma 0.9 => the "small fraction of tail requests necessitating
+    # large KV movements"), deep shared system prefixes
+    # (chain_node_tokens=1024) — the KV-reuse-plane sweep's workload.
+    "mooncake-tail": WorkloadSpec("mooncake-tail", mean_prompt=22528,
+                                  reuse_mean=0.55, zipf_a=1.4, sigma=0.9,
+                                  n_prefixes=48, chain_node_tokens=1024),
 }
+
+
+def prefix_chain(prefix_id: int, reuse_len: int,
+                 spec: WorkloadSpec) -> tuple:
+    """Hierarchical prefix chain for one request: ``((node, tokens), ...)``.
+
+    The chain walks prefix ``prefix_id``'s lineage from the tree root; each
+    ancestor contributes exactly ``spec.chain_node_tokens`` tokens and the
+    leaf absorbs whatever of ``reuse_len`` remains, so two prefixes with a
+    common ancestor share identical leading (node, tokens) spans — which
+    the block-granular KV store turns into partial-prefix hits. Pure
+    function of already-sampled trace fields: adding chains changes no RNG
+    draw, so fixed-seed traces stay bit-identical.
+    """
+    lineage = []
+    p = int(prefix_id)
+    while True:
+        lineage.append(p)
+        if p <= 0:
+            break
+        p = (p - 1) // max(spec.chain_branch, 2)
+    lineage.reverse()
+    out = []
+    left = int(reuse_len)
+    for i, q in enumerate(lineage):
+        last = i == len(lineage) - 1
+        t = left if last else min(spec.chain_node_tokens, left)
+        if t <= 0:
+            break
+        out.append((q, t))
+        left -= t
+    return tuple(out)
 
 
 # ------------------------------------------------------------ arrival draws
@@ -213,12 +265,14 @@ def generate_trace(spec: WorkloadSpec, n_requests: int, rps: float,
     for i in range(total):
         rid = i - warmup            # warm-up requests get negative ids
         cls = classes[i] if classes else "standard"
+        reuse_len = int(lengths[i] * reuse_frac[i])
         out.append(Request(
             rid=rid,
             arrival=float(arrivals[i]),
             prompt_len=int(lengths[i]),
-            reuse_len=int(lengths[i] * reuse_frac[i]),
+            reuse_len=reuse_len,
             prefix_id=int(prefixes[i]),
+            prefix_chain=prefix_chain(int(prefixes[i]), reuse_len, spec),
             slo_class=cls,
             slo_scale=SLO_CLASSES[cls] if classes else 0.0,
             out_len=int(out_lens[i]) if out_lens is not None else 0,

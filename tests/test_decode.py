@@ -335,3 +335,135 @@ def test_trace_decode_lens_is_separate_stream():
         assert (ra.arrival, ra.prompt_len, ra.reuse_len, ra.prefix_id) == \
             (rb.arrival, rb.prompt_len, rb.reuse_len, rb.prefix_id)
         assert ra.out_len == 0 and rb.out_len >= 1
+
+
+# ------------------------------------------------ decode-side auto-eviction
+class _EvictRT(_StubRT):
+    """Stub runtime with just enough net + kvstore surface for the
+    auto-evict rule (bottleneck feasibility, flow cancellation, block
+    release)."""
+
+    class _Topo:
+        capacity = {0: 10.0}               # exclusive service at 10 B/s
+
+        def route(self, src, dst, fid):
+            return (0,)
+
+    class _EvictNet:
+        def __init__(self):
+            self.flows = {}
+            self.routes = {}
+            self.topo = _EvictRT._Topo()
+
+        def remove(self, flow):
+            self.flows.pop(flow.fid, None)
+
+    class _Store:
+        def __init__(self):
+            self.released = []
+
+        def release(self, rid):
+            self.released.append(rid)
+
+    def __init__(self):
+        super().__init__()
+        self.net = self._EvictNet()
+        self.kvstore = self._Store()
+
+
+def _migrating(plane, rt, rid, pool, src, dst, deadline, payload=None):
+    f = Flow(new_flow_id(), rid, -1, Stage.D2D, 100.0, src=src, dst=dst,
+             target_layer=0, n_layers=2, deadline=deadline)
+    sess = DecodeSession(rid=rid, pool=pool, ep=src, prompt_tokens=50,
+                         out_tokens=20,
+                         tpot_budget=plane.pools[pool].tpot_budget,
+                         started=0.0, last_token=0.0, payload=payload)
+    sess.state = "migrating"
+    sess.migrate_dst = dst
+    sess.d2d_fid = f.fid
+    plane.sessions[rid] = sess
+    plane.incoming[dst] += 1
+    plane._inflight[pool] += 1
+    rt.flows[f.fid] = f
+    rt.net.flows[f.fid] = f
+    return sess, f
+
+
+def test_auto_evict_requeues_infeasible_migration_on_source():
+    """A non-loose session whose migration deadline went infeasible keeps
+    its KV where it is: the D2D is abandoned (flow cancelled, reserved
+    slots released) and the session re-queues on its source endpoint,
+    flagged so the rebalancer cannot immediately re-pick it."""
+    plane, _ = _plane(auto_evict=True)
+    rt = _EvictRT()
+    plane.bind(rt)
+    sess, f = _migrating(plane, rt, rid=1, pool="default", src=0, dst=1,
+                         deadline=1e9)                 # 100 B at 10 B/s
+    assert plane.auto_evict(0.5) == 0                  # ample time: untouched
+    # 100 B cannot arrive by t=1.0 even at the bottleneck's full 10 B/s
+    f.deadline = 1.0
+    assert plane.auto_evict(0.5) == 1
+    assert f.fid not in rt.net.flows                   # D2D cancelled
+    assert plane.incoming[1] == 0 and plane._inflight["default"] == 0
+    assert sess.rid in plane.sessions                  # re-admitted
+    assert sess.pool == "default" and sess.ep == 0 and sess.no_migrate
+    assert sess.state in ("active", "queued")
+    assert plane.stats["abandoned"] == 1
+    assert plane.stats["evicted"] == 0                 # nothing dropped
+
+
+def test_auto_evict_spills_loose_sessions_to_bulk_pool():
+    pools = (DecodePoolSpec(name="interactive", slots_per_ep=2,
+                            tpot_budget=0.03),
+             DecodePoolSpec(name="bulk", slots_per_ep=2, tpot_budget=0.12))
+    plane, _ = _plane(pools=pools, eps=(0, 1, 2, 3), auto_evict=True)
+    rt = _EvictRT()
+    plane.bind(rt)
+    loose = Request(rid=2, arrival=0.0, prompt_len=50, reuse_len=0,
+                    prefix_id=0, slo_class="loose")
+    sess, f = _migrating(plane, rt, rid=2, pool="interactive", src=0, dst=1,
+                         deadline=0.1, payload=loose)
+    assert plane.auto_evict(5.0) == 1                  # deadline long gone
+    assert sess.pool == "bulk"                         # spilled
+    assert sess.ep in plane.pool_eps["bulk"]
+    assert sess.tpot_budget == pytest.approx(0.12)     # relaxed budget
+    assert plane.stats["spilled"] == 1
+    # the abandoning evict() released the pins; the session itself lives on
+    assert rt.kvstore.released == [2]
+    assert sess.rid in plane.sessions
+
+
+def test_auto_evict_drops_loose_without_spill_and_releases_kv():
+    plane, _ = _plane(auto_evict=True)                 # single pool: no spill
+    rt = _EvictRT()
+    plane.bind(rt)
+    loose = Request(rid=3, arrival=0.0, prompt_len=50, reuse_len=0,
+                    prefix_id=0, slo_class="loose")
+    sess, f = _migrating(plane, rt, rid=3, pool="default", src=0, dst=1,
+                         deadline=0.1, payload=loose)
+    assert plane.auto_evict(5.0) == 1
+    assert sess.rid not in plane.sessions              # dropped for good
+    assert plane.stats["dropped"] == 1 and plane.stats["evicted"] == 1
+    assert rt.kvstore.released == [3]                  # blocks back to store
+
+
+def test_auto_evict_end_to_end_smoke():
+    """Auto-eviction enabled on a contended sim run: the plane must drain
+    (no leaked sessions/flows) and the rule must not drop non-loose work."""
+    spec = _sim_spec(decode=DecodeSpec(
+        pools=(DecodePoolSpec(name="interactive", slots_per_ep=2,
+                              tpot_budget=0.02,
+                              classes=("tight", "standard")),
+               DecodePoolSpec(name="bulk", slots_per_ep=4, tpot_budget=0.2,
+                              classes=("loose",))),
+        mean_out=64, out_sigma=1.0, trigger_delta=2, release_delta=1,
+        max_inflight=4, min_migrate_remaining=2, auto_evict=True))
+    trace = generate_trace(WORKLOADS["qwen-agent"], n_requests=48, rps=24.0,
+                           seed=3, warmup=8, decode_lens=True,
+                           slo_mix={"tight": 0.3, "standard": 0.3,
+                                    "loose": 0.4})
+    sim = ClusterSim(spec, make_policy("mfs"))
+    m = sim.run(trace)
+    st = m.decode_stats
+    assert st["live_sessions"] == 0 and len(sim.runtime.flows) == 0
+    assert st["finished"] + st["dropped"] == st["admitted"]

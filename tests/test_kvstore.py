@@ -1,0 +1,361 @@
+"""KV-reuse plane: tiered-store accounting (insert/evict/capacity, LRU,
+pins), partial-chain hits, the prompt-minus-one hit bound, WB deadline
+derivation + MFS band rules, cache-aware routing, capacity-responsive hit
+rates, and sim<->serve multi-source Stage-1 parity."""
+import numpy as np
+import pytest
+
+from repro.core import Stage, make_policy
+from repro.core.arbiter import MFSScheduler
+from repro.core.kvstore import (HitPlan, KVStore, KVStoreSpec, TierSpec,
+                                chain_keys, content_chain, kv_route)
+from repro.core.msflow import Flow, new_flow_id
+from repro.simcluster.papermodels import PAPER_MODELS
+from repro.simcluster.sim import ClusterSim, ClusterSpec, ParallelismSpec
+from repro.simcluster.trace import (Request, WORKLOADS, WorkloadSpec,
+                                    generate_trace, prefix_chain)
+
+BT = 16           # block_tokens used by the unit tests
+BB = float(BT)    # block bytes at bytes_per_token=1.0
+
+
+def _store(hbm_blocks=4, dram_blocks=0, remote_blocks=8, **kw):
+    tiers = [TierSpec("hbm", capacity=hbm_blocks * BB)]
+    if dram_blocks:
+        tiers.append(TierSpec("dram", capacity=dram_blocks * BB,
+                              fetch_bw=4.0, writeback=True))
+    if remote_blocks:
+        tiers.append(TierSpec("remote", capacity=remote_blocks * BB,
+                              fetch_bw=2.0, scope="pooled", writeback=True))
+    spec = KVStoreSpec(block_tokens=BT, tiers=tuple(tiers), **kw)
+    return KVStore(spec, bytes_per_token=1.0,
+                   unit_eps=[[0], [1]], store_eps=[4], nic_bw=8.0)
+
+
+def _admit(store, rid, unit, keys, now=0.0, finish_wb=True):
+    """Resolve + admit one synthetic request; optionally land its WBs."""
+    class _Item:
+        pass
+    it = _Item()
+    it.rid, it.unit = rid, unit
+    store.resolve(keys, 10 ** 9, unit, rid)
+    flows = store.admit(it, now)
+    if finish_wb:
+        for f in flows:
+            store.on_wb_done(f)
+    return flows
+
+
+# ----------------------------------------------------------- chain structure
+def test_prefix_chain_shares_ancestor_spans():
+    spec = WorkloadSpec("t", mean_prompt=4096, reuse_mean=0.5,
+                        chain_branch=4, chain_node_tokens=512)
+    # prefixes 5 and 6 are siblings under parent 1, under root 0
+    a = prefix_chain(5, 2000, spec)
+    b = prefix_chain(6, 2000, spec)
+    assert a[:2] == b[:2] == ((0, 512), (1, 512))
+    assert a[2][0] == 5 and b[2][0] == 6          # leaves diverge
+    assert sum(t for _, t in a) == 2000           # leaf takes the remainder
+    ka, kb = chain_keys(a, BT), chain_keys(b, BT)
+    shared = 2 * (512 // BT)
+    assert ka[:shared] == kb[:shared] and ka[shared] != kb[shared]
+
+
+def test_generated_traces_carry_chains_without_extra_draws():
+    base = generate_trace(WORKLOADS["qwen-agent"], 50, rps=10, seed=3)
+    again = generate_trace(WORKLOADS["qwen-agent"], 50, rps=10, seed=3)
+    assert all(r.prefix_chain for r in base)
+    for r, r2 in zip(base, again):
+        assert (r.arrival, r.prompt_len, r.reuse_len, r.prefix_chain) == \
+            (r2.arrival, r2.prompt_len, r2.reuse_len, r2.prefix_chain)
+        assert sum(t for _, t in r.prefix_chain) == r.reuse_len
+
+
+# ------------------------------------------------------- capacity accounting
+def test_insert_evict_capacity_accounting():
+    store = _store(hbm_blocks=2, remote_blocks=8)
+    keys = chain_keys(((0, 4 * BT),), BT)          # 4 blocks
+    _admit(store, 0, 0, keys)
+    # origin tier held to capacity: LRU evicted down to 2 blocks
+    assert store.resident_bytes("hbm") == 2 * BB
+    assert store.stats["evictions"] == 2
+    # the pooled tier received every block via writeback
+    assert store.resident_bytes("remote") == 4 * BB
+    assert store.stats["wb_flows"] == 1 and store.stats["wb_done"] == 1
+    # LRU order: the two *youngest* blocks survived in HBM
+    assert [store.blocks[k] for k in keys[2:]] == [{(0, 0), (1, -1)}] * 2
+    assert all((0, 0) not in store.blocks[k] for k in keys[:2])
+
+
+def test_pinned_blocks_survive_eviction_pressure():
+    store = _store(hbm_blocks=1, remote_blocks=0)
+    k1 = chain_keys(((1, BT),), BT)
+    k2 = chain_keys(((2, BT),), BT)
+    _admit(store, 0, 0, k1)
+    plan = store.resolve(k1, 10 ** 9, 0, rid=7)    # pins k1's block for rid 7
+    assert plan.tokens == BT
+    _admit(store, 1, 0, k2)                        # wants the only HBM slot
+    # the pinned block was NOT evicted from under the in-flight fetch
+    assert (0, 0) in store.blocks[k1[0]]
+    assert store.stats["failed_inserts"] >= 1
+    store.release(7)
+    _admit(store, 2, 0, k2)                        # now the LRU slot frees
+    assert (0, 0) in store.blocks[k2[0]]
+
+
+# ------------------------------------------------------------- hit resolution
+def test_partial_chain_hit_across_tiers_is_multi_source():
+    store = _store(hbm_blocks=1, remote_blocks=8)
+    keys = chain_keys(((3, 2 * BT),), BT)
+    _admit(store, 0, 0, keys)                      # HBM keeps only block 1
+    plan = store.resolve(keys, 10 ** 9, 0, rid=1)
+    assert plan.tokens == 2 * BT
+    assert [(s.tier, s.tokens) for s in plan.segments] == \
+        [("remote", BT), ("hbm", BT)]
+    # pooled segments fetch from the store endpoints at the tier bandwidth
+    assert plan.segments[0].src_eps == (4,)
+    assert plan.segments[0].tier_cap == 2.0
+    # local HBM segments fetch from the owner unit uncapped
+    assert plan.segments[1].src_eps == (0,)
+    assert plan.segments[1].tier_cap is None
+
+
+def test_local_copies_preferred_over_tier_order():
+    store = _store(hbm_blocks=4, dram_blocks=4, remote_blocks=8)
+    keys = chain_keys(((5, BT),), BT)
+    _admit(store, 0, 1, keys)                      # resident on unit 1 + pool
+    # unit 1 serves from its own HBM; unit 0 prefers the pooled store over
+    # a cross-unit HBM fetch only when ranked worse — locality wins first
+    local = store.resolve(keys, 10 ** 9, 1, rid=2)
+    assert local.segments[0].tier == "hbm" and local.segments[0].loc == 1
+    remote = store.resolve(keys, 10 ** 9, 0, rid=3)
+    assert remote.segments[0].loc != 0             # nothing local to unit 0
+
+
+def test_hit_never_exceeds_prompt_minus_one_suffix_token():
+    """Regression: a full store must never return a hit covering the whole
+    prompt — at least one suffix token is always computed."""
+    store = _store(hbm_blocks=64, remote_blocks=64)
+    keys = chain_keys(((6, 8 * BT),), BT)
+    _admit(store, 0, 0, keys)                      # everything resident
+    for prompt_len in (BT + 1, 2 * BT, 4 * BT + 3, 8 * BT):
+        plan = store.resolve(keys, prompt_len - 1, 0, rid=100 + prompt_len)
+        assert plan.tokens <= prompt_len - 1
+    # serve-path guard sits in the chain itself: 2*BT tokens -> 1 block
+    toks = np.arange(2 * BT)
+    assert len(content_chain(toks, BT)) == 1
+
+
+# ---------------------------------------------------------------- writebacks
+def test_wb_flow_deadline_derivation_and_shape():
+    store = _store(hbm_blocks=8, dram_blocks=8, remote_blocks=8)
+    keys = chain_keys(((7, 3 * BT),), BT)
+    flows = _admit(store, 5, 1, keys, now=2.0, finish_wb=False)
+    assert {f.stage for f in flows} == {Stage.WB}
+    by_dst = {f.dst: f for f in flows}
+    dram, remote = by_dst[1], by_dst[4]            # local loopback vs pool
+    assert dram.src == dram.dst == 1               # host-local writeback
+    assert remote.src == 1 and remote.dst == 4
+    for f, bw in ((dram, 4.0), (remote, 2.0)):
+        assert f.size == 3 * BB and f.tier_cap == bw
+        # loose derived deadline: now + scale x tier-bandwidth ideal
+        assert f.deadline == pytest.approx(2.0 + 8.0 * f.size / bw)
+    # duplicate admission while the WB is in flight emits nothing new
+    assert _admit(store, 6, 1, keys, finish_wb=False) == []
+    for f in flows:
+        store.on_wb_done(f)
+    assert store.summary()["pinned_blocks"] == 0
+
+
+class _ArbView:
+    now = 0.0
+
+    def bottleneck(self, flow):
+        return 1.0, 0.0
+
+    def mlu_inputs(self, flow, level):
+        return 1.0, 0.0
+
+    def l_curr(self, unit):
+        return 0
+
+    def computing(self, rid):
+        return False
+
+    def red_rank(self, rid):
+        return 0
+
+    def downstream_estimate(self, flow):
+        return 0.0
+
+
+def test_wb_band_below_d2d_and_barred_from_level1():
+    sched = MFSScheduler()
+    view = _ArbView()
+    # identical critical-but-feasible urgency: MLU = 100/150 = 0.67 >= U
+    mk = lambda stage, rid: Flow(new_flow_id(), rid, 0, stage, 100.0, src=0,
+                                 dst=1, target_layer=0, n_layers=4,
+                                 deadline=150.0)
+    p2d, d2d, wb = mk(Stage.P2D, 0), mk(Stage.D2D, 1), mk(Stage.WB, 2)
+    for f in (p2d, d2d, wb):
+        sched.on_flow_submitted(f, view)
+    sched.assign([p2d, d2d, wb], view, ("tick",))
+    assert p2d.level == 1                   # critical reservation (I3)
+    assert wb.level >= 2                    # WB never enters level 1
+    # band order at equal level: P2D > D2D > WB
+    assert (p2d.priority_key[1], d2d.priority_key[1], wb.priority_key[1]) \
+        == (1, 2, 3)
+    assert p2d.priority_key < d2d.priority_key < wb.priority_key
+
+
+# ---------------------------------------------------------------- routing
+def test_cache_aware_routing_weighs_affinity_against_backlog():
+    store = _store(hbm_blocks=8, remote_blocks=8)
+    keys = chain_keys(((9, 4 * BT),), BT)
+    _admit(store, 0, 1, keys)                      # resident on unit 1
+    unit, plan = kv_route(store, keys, 10 ** 9, [0.0, 0.0], rid=1)
+    assert unit == 1 and plan.tokens == 4 * BT     # affinity wins ties
+    # a deep backlog on the owning unit outweighs the hit affinity
+    unit2, plan2 = kv_route(store, keys, 10 ** 9,
+                            [0.0, 10 * 4 * BT], rid=2)
+    assert unit2 == 0
+    assert plan2.tokens == 4 * BT                  # pooled copies still hit
+    assert all(s.loc != 0 for s in plan2.segments)
+
+
+# ----------------------------------------------------------- sim end-to-end
+def _kv_cluster(kv, **kw):
+    kw.setdefault("par", ParallelismSpec(mode="ep", ep=2))
+    kw.setdefault("n_units", 2)
+    kw.setdefault("layer_groups", 4)
+    return ClusterSpec(model=PAPER_MODELS["mixtral-8x7b"], kvstore=kv, **kw)
+
+
+def _kv_spec(cap_blocks, bpt, block_tokens=256):
+    cap = cap_blocks * block_tokens * bpt
+    return KVStoreSpec(block_tokens=block_tokens, tiers=(
+        TierSpec("hbm", capacity=cap),
+        TierSpec("remote", capacity=8 * cap, fetch_bw=12e9, scope="pooled",
+                 writeback=True)))
+
+
+def test_hit_rate_responds_to_store_capacity():
+    trace = generate_trace(WORKLOADS["qwen-agent"], 80, rps=20, seed=1)
+    rates = {}
+    bpt = PAPER_MODELS["mixtral-8x7b"].kv_bytes_per_token_layer(2, 0) \
+        * PAPER_MODELS["mixtral-8x7b"].n_layers
+    for label, blocks in (("tiny", 2), ("big", 4096)):
+        sim = ClusterSim(_kv_cluster(_kv_spec(blocks, bpt)),
+                         make_policy("mfs"))
+        m = sim.run(trace)
+        rates[label] = m.kv_hit_rate()
+        assert len(sim.runtime.flows) == 0         # incl. WB flows drained
+        assert sim.kvstore.summary()["pinned_blocks"] == 0
+    assert rates["big"] > rates["tiny"]            # capacity-bounded hits
+    assert rates["big"] > 0.2
+
+
+def test_store_off_keeps_legacy_reuse_model():
+    """Without a KVStoreSpec the sim must keep the pre-sampled reuse path:
+    no store, no WB flows, no kv metrics — the legacy sweep contract."""
+    trace = generate_trace(WORKLOADS["qwen-conv"], 30, rps=20, seed=0)
+    sim = ClusterSim(_kv_cluster(None), make_policy("mfs"))
+    m = sim.run(trace)
+    assert sim.kvstore is None
+    assert not m.kv_prompt_tokens and "kv_hit_rate" not in m.summary()
+
+
+# ------------------------------------------------- sim <-> serve S1 parity
+def test_sim_and_serve_emit_identical_multisource_s1():
+    """Matched configs + a store engineered so the second request's hit
+    spans two tiers (HBM evicted the first block, the pooled tier kept it):
+    both hosts must emit identical multi-source Stage-1 flow sequences and
+    identical WB flows — same sizes, groups, deadlines."""
+    import jax
+    from repro.configs import SMOKES
+    from repro.models.lm import build_model
+    from repro.serving import DisaggConfig, DisaggServer, ServeRequest
+    from repro.simcluster.hw import A100
+
+    cfg = SMOKES["smollm-360m"]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    bpt = sum(cfg.kv_bytes_per_token_layer(2, l) for l in range(cfg.n_layers))
+    kv = KVStoreSpec(block_tokens=16, tiers=(
+        TierSpec("hbm", capacity=16 * bpt),        # exactly one block
+        TierSpec("remote", capacity=1e12, fetch_bw=2e9, scope="pooled",
+                 writeback=True)))
+
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab, size=(32,))
+    sufa = rng.integers(0, cfg.vocab, size=(16,))
+    sufb = rng.integers(0, cfg.vocab, size=(12,))
+
+    srv = DisaggServer(model, params, cfg=DisaggConfig(
+        n_prefill_units=1, gpus_per_unit=1, layer_groups=2, hw=A100,
+        n_pages=128, page_size=16, kvstore=kv))
+    srv.runtime.trace_stages = True
+    res = srv.serve([
+        ServeRequest(rid=0, arrival=0.0,
+                     tokens=np.concatenate([prefix, sufa]), max_new=1),
+        ServeRequest(rid=1, arrival=0.05,
+                     tokens=np.concatenate([prefix, sufb]), max_new=1),
+    ])
+    assert res[1].reused_tokens == 32              # live multi-tier hit
+    assert srv.kvstore.stats["hit_tokens_remote"] == 16
+    assert srv.kvstore.stats["hit_tokens_hbm"] == 16
+
+    sim = ClusterSim(ClusterSpec(
+        model=cfg, par=ParallelismSpec(mode="ep", ep=1), n_units=1,
+        gpus_per_server=1, layer_groups=2, slo_mode="per-request", hw=A100,
+        kvstore=kv), make_policy("mfs"))
+    sim.runtime.trace_stages = True
+    sim.run([
+        Request(rid=0, arrival=0.0, prompt_len=48, reuse_len=32,
+                prefix_id=7, prefix_chain=((7, 32),)),
+        Request(rid=1, arrival=0.05, prompt_len=44, reuse_len=32,
+                prefix_id=7, prefix_chain=((7, 32),)),
+    ])
+    assert sim.kvstore.stats["hit_tokens_remote"] == 16
+    assert sim.kvstore.stats["hit_tokens_hbm"] == 16
+
+    def trace_of(log):
+        return [(r, stage, group, size, deadline)
+                for r, stage, group, size, deadline in log]
+
+    got, want = trace_of(srv.runtime.stage_log), trace_of(sim.runtime.stage_log)
+    assert len(got) == len(want) > 0
+    # multi-source: request 1 fetches each group from TWO sources, and the
+    # WB replication flows appear in the shared log on both hosts
+    s1 = [e for e in got if e[0] == 1 and e[1] == Stage.KV_REUSE]
+    assert len(s1) == 4                            # 2 segments x 2 groups
+    assert {e[1] for e in got} >= {Stage.KV_REUSE, Stage.P2D, Stage.WB}
+    for (r_a, s_a, g_a, sz_a, dl_a), (r_b, s_b, g_b, sz_b, dl_b) \
+            in zip(got, want):
+        assert (r_a, s_a, g_a) == (r_b, s_b, g_b)
+        assert sz_a == pytest.approx(sz_b, rel=1e-12)
+        if dl_a is None or dl_b is None:
+            assert dl_a == dl_b
+        else:
+            assert dl_a == pytest.approx(dl_b, rel=1e-12)
+
+
+def test_decode_plane_holds_and_releases_store_pins():
+    """With both planes attached, hit pins survive prefill admission (live
+    sessions keep their prefix blocks un-evictable) and drain to zero once
+    every session finishes or is evicted."""
+    from repro.core.decode import DecodePoolSpec, DecodeSpec
+
+    bpt = PAPER_MODELS["mixtral-8x7b"].kv_bytes_per_token_layer(2, 0) \
+        * PAPER_MODELS["mixtral-8x7b"].n_layers
+    spec = _kv_cluster(_kv_spec(4096, bpt), decode=DecodeSpec(
+        pools=(DecodePoolSpec(name="default", slots_per_ep=4),),
+        mean_out=32, trigger_delta=2, max_inflight=4, auto_evict=True))
+    trace = generate_trace(WORKLOADS["qwen-agent"], 40, rps=20, seed=2,
+                           warmup=8, decode_lens=True)
+    sim = ClusterSim(spec, make_policy("mfs"))
+    m = sim.run(trace)
+    assert m.decode_stats["live_sessions"] == 0
+    assert len(sim.runtime.flows) == 0
+    assert sim.kvstore.summary()["pinned_blocks"] == 0
+    assert m.kv_hit_rate() > 0
