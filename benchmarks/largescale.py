@@ -39,11 +39,20 @@ TTFT attainment leads the deadline-chasing/fair-sharing baselines; SJF
 again lands close by accident (WB flows are the largest class, so
 size-ordering also defers them).
 
+The **chunked-prefill arm** reruns the Mooncake tail (store off, top
+contended rate) with Sarathi-style chunking on vs. off for all 5 policies:
+with ``ChunkSpec(2048)`` every super-layer group computes in token-budgeted
+chunks whose P2D leaves while later chunks still compute, so the
+long-prompt class (>= 32k tokens) sheds its un-overlapped last-group KV
+tail — ``largescale.chunked.long_ttft_gain.*`` records the per-policy
+long-prompt mean-TTFT improvement.
+
 Emits CSV rows (``largescale.*``) plus ``BENCH_largescale.json`` with the
 full curve data for plotting, and the fluid-net incremental-allocation
 counters (group fills per reallocation) observed during the sweep. With
-the decode plane and KV store disabled the legacy sections are bit-for-bit
-identical to the pre-decode-plane / pre-kvstore sweeps.
+the decode plane, KV store and chunking disabled the legacy sections are
+bit-for-bit identical to the pre-decode-plane / pre-kvstore /
+pre-chunking sweeps.
 """
 from __future__ import annotations
 
@@ -54,6 +63,7 @@ from typing import Dict, List, Optional
 from repro.core import make_policy
 from repro.core.decode import DecodePoolSpec, DecodeSpec
 from repro.core.kvstore import KVStoreSpec, TierSpec
+from repro.core.stages import ChunkSpec
 from repro.simcluster.hw import A100, Gb, HW
 from repro.simcluster.papermodels import PAPER_MODELS
 from repro.simcluster.sim import ClusterSim, ClusterSpec, ParallelismSpec
@@ -100,6 +110,18 @@ KV_HW = HW("a100-50g", flops=A100.flops, hbm_bw=A100.hbm_bw,
 #: so eviction is live and hit rates are capacity-bounded
 KV_REMOTE_CAP = 64e9
 
+# ---- chunked-prefill arm: Sarathi chunks on the Mooncake tail -----------
+#: same 16-unit sp cluster / 50 Gbps NIC share as the KV-reuse sweep (the
+#: workload whose ~22k-token prompts chunking exists for), store off so the
+#: chunking effect is isolated; top contended rate only — chunk-on cells
+#: walk ~11x more (group, chunk) events, so the arm stays narrow
+CHUNK_TOKENS = 2048
+CHUNK_RATE = KV_RATES[-1]
+N_CHUNK = 300
+#: "long-prompt class" = prompts >= this (the heavy tail whose whole-group
+#: KV holds the P2D tail in the unchunked schedule)
+CHUNK_LONG_TOKENS = 32768
+
 
 def _kvstore_spec(remote_cap: float = KV_REMOTE_CAP) -> KVStoreSpec:
     # per-unit tiers deliberately smaller than the per-unit working-set
@@ -113,12 +135,15 @@ def _kvstore_spec(remote_cap: float = KV_REMOTE_CAP) -> KVStoreSpec:
                         scope="pooled", writeback=True)))
 
 
-def _spec_kv(kv: Optional[KVStoreSpec]) -> ClusterSpec:
+def _spec_kv(kv: Optional[KVStoreSpec],
+             chunk: Optional[ChunkSpec] = None) -> ClusterSpec:
+    """The 16-unit sp Mooncake cluster shared by the KV-reuse sweep and
+    the chunked arm (one builder so the arms can't silently diverge)."""
     kw = dict(KV_SPEC)
     model = PAPER_MODELS[kw.pop("model")]
     return ClusterSpec(model=model, par=ParallelismSpec(mode="sp", sp=KV_SP),
                        decode_ratio=KV_DECODE_RATIO, hw=KV_HW, kvstore=kv,
-                       **kw)
+                       chunk=chunk, **kw)
 
 
 def _decode_spec(rebalance: bool) -> DecodeSpec:
@@ -175,6 +200,165 @@ def _per_class_attainment(metrics_by_rid: Dict, trace) -> Dict[str, float]:
         ok[r.slo_class].append(1 if met else 0)
     return {c: (sum(v) / len(v) if v else float("nan"))
             for c, v in ok.items()}
+
+
+def _spec_chunk(chunk_on: bool) -> ClusterSpec:
+    return _spec_kv(None, ChunkSpec(CHUNK_TOKENS) if chunk_on else None)
+
+
+def _run_kvreuse(rows: List[str], quick: bool = False) -> Dict:
+    """KV-reuse sweep: Mooncake tail over the tiered store, on vs off.
+
+    store_off is the legacy pre-sampled-reuse model (static owner oracle);
+    store_on resolves hits against the live tiered store, S1 is
+    multi-source and admission emits Stage-WB writebacks (fixed-mode SLO
+    calibration is store-aware: the base comes from expected steady-state
+    hits, so the two arms are directly comparable). Reported per policy:
+    TTFT attainment, live hit rate, per-tier hit mix, and the WB class
+    share on contended links (MFS defers WB below D2D — the
+    deadline-chasing/fair-sharing baselines hand it bandwidth)."""
+    n_kv = 120 if quick else N_KV
+    kv_rates = KV_RATES[-1:] if quick else KV_RATES
+    kvd = {"spec": KV_SPEC, "workload": KV_WORKLOAD, "sp": KV_SP,
+           "hw": KV_HW.name, "decode_ratio": KV_DECODE_RATIO,
+           "rates": list(kv_rates), "n_requests": n_kv,
+           "remote_cap": KV_REMOTE_CAP,
+           "ttft": {}, "hit_rate": {}, "tier_mix": {}, "wb_share": {},
+           "wb_bytes": {}, "evictions": {}}
+    for mode, kv in (("store_on", _kvstore_spec()), ("store_off", None)):
+        ttft: Dict[str, List[float]] = {p: [] for p in POLICIES}
+        hitr: Dict[str, List[float]] = {p: [] for p in POLICIES}
+        tmix: Dict[str, List[Dict]] = {p: [] for p in POLICIES}
+        wbsh: Dict[str, List[float]] = {p: [] for p in POLICIES}
+        wbby: Dict[str, List[float]] = {p: [] for p in POLICIES}
+        evc: Dict[str, List[float]] = {p: [] for p in POLICIES}
+        for rate in kv_rates:
+            trace = generate_trace(WORKLOADS[KV_WORKLOAD], n_kv, rps=rate,
+                                   seed=0, warmup=24,
+                                   arrival=ArrivalSpec(process="mmpp"))
+            for pol in POLICIES:
+                sim = ClusterSim(_spec_kv(kv), make_policy(pol))
+                t0 = time.time()
+                s = sim.run(trace).summary()
+                ttft[pol].append(s["slo_attainment"])
+                # store-off arms get null (not NaN — bare NaN is invalid
+                # strict JSON and breaks non-Python artifact consumers)
+                hitr[pol].append(s.get("kv_hit_rate"))
+                tmix[pol].append(s.get("kv_tier_mix", {}))
+                wbsh[pol].append(s.get("kv_wb_share_contended"))
+                wbby[pol].append(s.get("kv_wb_bytes", 0.0))
+                evc[pol].append(s.get("kv_evictions", 0.0))
+                assert len(sim.runtime.flows) == 0, "runtime leaked flows"
+                mix = s.get("kv_tier_mix") or {}
+                emit(rows, f"largescale.kvreuse.{mode}.{pol}.rps{rate:g}",
+                     f"{s['slo_attainment']:.4f}",
+                     f"hit={s.get('kv_hit_rate', float('nan')):.3f} "
+                     f"tiers=" + "/".join(f"{t}:{v:.2f}"
+                                          for t, v in mix.items())
+                     + f" wb_share={s.get('kv_wb_share_contended', float('nan')):.3f}"
+                     f" wall={time.time() - t0:.0f}s")
+        kvd["ttft"][mode] = ttft
+        kvd["hit_rate"][mode] = hitr
+        kvd["tier_mix"][mode] = tmix
+        kvd["wb_share"][mode] = wbsh
+        kvd["wb_bytes"][mode] = wbby
+        kvd["evictions"][mode] = evc
+    # hit rate must respond to store capacity: MFS at 1/4 pooled capacity
+    trace = generate_trace(WORKLOADS[KV_WORKLOAD], n_kv, rps=kv_rates[-1],
+                           seed=0, warmup=24,
+                           arrival=ArrivalSpec(process="mmpp"))
+    s = ClusterSim(_spec_kv(_kvstore_spec(remote_cap=KV_REMOTE_CAP / 4)),
+                   make_policy("mfs")).run(trace).summary()
+    kvd["capacity_response"] = {
+        "remote_cap": KV_REMOTE_CAP / 4, "hit_rate": s["kv_hit_rate"],
+        "full_cap_hit_rate": kvd["hit_rate"]["store_on"]["mfs"][-1]}
+    emit(rows, "largescale.kvreuse.capacity_response",
+         f"{s['kv_hit_rate']:.3f} -> "
+         f"{kvd['capacity_response']['full_cap_hit_rate']:.3f}",
+         "hit rate at 1/4 vs full pooled capacity, mfs, top rate")
+    # WB deferral: mean WB class share on contended links across rates —
+    # lower under MFS (own band below D2D) than under FS/EDF
+    kvd["wb_share_mean"] = {
+        p: (sum(v for v in kvd["wb_share"]["store_on"][p]
+                if v is not None) / max(len(kv_rates), 1))
+        for p in POLICIES}
+    for p in POLICIES:
+        emit(rows, f"largescale.kvreuse.wb_share.{p}",
+             f"{kvd['wb_share_mean'][p]:.3f}",
+             "mean WB share on contended links, store on")
+    # MFS's TTFT advantage with the store on, at the top contended rate
+    top = kvd["ttft"]["store_on"]
+    kvd["mfs_ttft_ratio_at_top"] = {
+        p: top["mfs"][-1] / max(top[p][-1], 1e-9)
+        for p in POLICIES if p != "mfs"}
+    for p, r in sorted(kvd["mfs_ttft_ratio_at_top"].items()):
+        emit(rows, f"largescale.kvreuse.mfs_over_{p}", f"{r:.2f}",
+             f"TTFT attainment ratio at rps{kv_rates[-1]:g}, store on")
+    return kvd
+
+
+def _run_chunked(rows: List[str], quick: bool = False) -> Dict:
+    """Chunked-prefill arm: chunk on vs off x 5 policies on the Mooncake
+    tail at the top contended rate. With chunking on, chunk-*c* P2D
+    overlaps chunk-*c+1* compute and the RLI estimate tightens, so the
+    long-prompt class (>= CHUNK_LONG_TOKENS) sheds the un-overlapped
+    last-group KV tail — the arm records overall attainment plus the
+    long-prompt-class mean TTFT / attainment per policy. chunk_off is the
+    legacy group-granular schedule (bit-identical to the other sections'
+    scheduling model)."""
+    n_c = 120 if quick else N_CHUNK
+    chd = {"spec": KV_SPEC, "workload": KV_WORKLOAD, "sp": KV_SP,
+           "hw": KV_HW.name, "decode_ratio": KV_DECODE_RATIO,
+           "rate": CHUNK_RATE, "n_requests": n_c,
+           "chunk_tokens": CHUNK_TOKENS, "long_tokens": CHUNK_LONG_TOKENS,
+           "ttft": {}, "ttft_mean": {}, "long": {}}
+    trace = generate_trace(WORKLOADS[KV_WORKLOAD], n_c, rps=CHUNK_RATE,
+                           seed=0, warmup=24,
+                           arrival=ArrivalSpec(process="mmpp"))
+    for mode, on in (("chunk_off", False), ("chunk_on", True)):
+        att: Dict[str, float] = {}
+        mean: Dict[str, float] = {}
+        lng: Dict[str, Dict[str, float]] = {}
+        for pol in POLICIES:
+            sim = ClusterSim(_spec_chunk(on), make_policy(pol))
+            t0 = time.time()
+            m = sim.run(trace)
+            s = m.summary()
+            # empty long class -> null, not NaN (bare NaN is invalid strict
+            # JSON and breaks non-Python artifact consumers)
+            lp = {k: (None if isinstance(v, float) and v != v else v)
+                  for k, v in m.long_prompt_stats(CHUNK_LONG_TOKENS).items()}
+            att[pol] = s["slo_attainment"]
+            mean[pol] = s["ttft_mean"]
+            lng[pol] = lp
+            assert len(sim.runtime.flows) == 0, "runtime leaked flows"
+            lt = lp["ttft_mean"] if lp["ttft_mean"] is not None else float("nan")
+            la = lp["attainment"] if lp["attainment"] is not None else float("nan")
+            emit(rows, f"largescale.chunked.{mode}.{pol}.rps{CHUNK_RATE:g}",
+                 f"{s['slo_attainment']:.4f}",
+                 f"ttft_mean={s['ttft_mean']:.3f} "
+                 f"long_ttft={lt:.3f} "
+                 f"long_att={la:.3f} (n={lp['n']}) "
+                 f"wall={time.time() - t0:.0f}s")
+        chd["ttft"][mode] = att
+        chd["ttft_mean"][mode] = mean
+        chd["long"][mode] = lng
+    # the acceptance signal: chunking must cut the long-prompt-class mean
+    # TTFT (ratio > 1) — reported per policy (null if the class was empty)
+    def _gain(p):
+        off = chd["long"]["chunk_off"][p]["ttft_mean"]
+        on = chd["long"]["chunk_on"][p]["ttft_mean"]
+        if off is None or on is None:
+            return None
+        return off / max(on, 1e-9)
+    chd["long_ttft_gain"] = {p: _gain(p) for p in POLICIES}
+    for p in POLICIES:
+        g = chd["long_ttft_gain"][p]
+        emit(rows, f"largescale.chunked.long_ttft_gain.{p}",
+             "null" if g is None else f"{g:.3f}",
+             f"long-prompt mean TTFT, chunk_off / chunk_on at "
+             f"rps{CHUNK_RATE:g}")
+    return chd
 
 
 def main(quick: bool = False):
@@ -274,91 +458,9 @@ def main(quick: bool = False):
              f"TTFT attainment ratio at rps{dec_rates[-1]:g}, d2d on")
     result["decode"] = dec
 
-    # ---- KV-reuse sweep: Mooncake tail over the tiered store, on vs off --
-    # store_off is the legacy pre-sampled-reuse model (static owner oracle);
-    # store_on resolves hits against the live tiered store, S1 is
-    # multi-source and admission emits Stage-WB writebacks. Reported per
-    # policy: TTFT attainment, live hit rate, per-tier hit mix, and the WB
-    # class share on contended links (MFS defers WB below D2D — the
-    # deadline-chasing/fair-sharing baselines hand it bandwidth).
-    n_kv = 120 if quick else N_KV
-    kv_rates = KV_RATES[-1:] if quick else KV_RATES
-    kvd = {"spec": KV_SPEC, "workload": KV_WORKLOAD, "sp": KV_SP,
-           "hw": KV_HW.name, "decode_ratio": KV_DECODE_RATIO,
-           "rates": list(kv_rates), "n_requests": n_kv,
-           "remote_cap": KV_REMOTE_CAP,
-           "ttft": {}, "hit_rate": {}, "tier_mix": {}, "wb_share": {},
-           "wb_bytes": {}, "evictions": {}}
-    for mode, kv in (("store_on", _kvstore_spec()), ("store_off", None)):
-        ttft: Dict[str, List[float]] = {p: [] for p in POLICIES}
-        hitr: Dict[str, List[float]] = {p: [] for p in POLICIES}
-        tmix: Dict[str, List[Dict]] = {p: [] for p in POLICIES}
-        wbsh: Dict[str, List[float]] = {p: [] for p in POLICIES}
-        wbby: Dict[str, List[float]] = {p: [] for p in POLICIES}
-        evc: Dict[str, List[float]] = {p: [] for p in POLICIES}
-        for rate in kv_rates:
-            trace = generate_trace(WORKLOADS[KV_WORKLOAD], n_kv, rps=rate,
-                                   seed=0, warmup=24,
-                                   arrival=ArrivalSpec(process="mmpp"))
-            for pol in POLICIES:
-                sim = ClusterSim(_spec_kv(kv), make_policy(pol))
-                t0 = time.time()
-                s = sim.run(trace).summary()
-                ttft[pol].append(s["slo_attainment"])
-                # store-off arms get null (not NaN — bare NaN is invalid
-                # strict JSON and breaks non-Python artifact consumers)
-                hitr[pol].append(s.get("kv_hit_rate"))
-                tmix[pol].append(s.get("kv_tier_mix", {}))
-                wbsh[pol].append(s.get("kv_wb_share_contended"))
-                wbby[pol].append(s.get("kv_wb_bytes", 0.0))
-                evc[pol].append(s.get("kv_evictions", 0.0))
-                assert len(sim.runtime.flows) == 0, "runtime leaked flows"
-                mix = s.get("kv_tier_mix") or {}
-                emit(rows, f"largescale.kvreuse.{mode}.{pol}.rps{rate:g}",
-                     f"{s['slo_attainment']:.4f}",
-                     f"hit={s.get('kv_hit_rate', float('nan')):.3f} "
-                     f"tiers=" + "/".join(f"{t}:{v:.2f}"
-                                          for t, v in mix.items())
-                     + f" wb_share={s.get('kv_wb_share_contended', float('nan')):.3f}"
-                     f" wall={time.time() - t0:.0f}s")
-        kvd["ttft"][mode] = ttft
-        kvd["hit_rate"][mode] = hitr
-        kvd["tier_mix"][mode] = tmix
-        kvd["wb_share"][mode] = wbsh
-        kvd["wb_bytes"][mode] = wbby
-        kvd["evictions"][mode] = evc
-    # hit rate must respond to store capacity: MFS at 1/4 pooled capacity
-    trace = generate_trace(WORKLOADS[KV_WORKLOAD], n_kv, rps=kv_rates[-1],
-                           seed=0, warmup=24,
-                           arrival=ArrivalSpec(process="mmpp"))
-    s = ClusterSim(_spec_kv(_kvstore_spec(remote_cap=KV_REMOTE_CAP / 4)),
-                   make_policy("mfs")).run(trace).summary()
-    kvd["capacity_response"] = {
-        "remote_cap": KV_REMOTE_CAP / 4, "hit_rate": s["kv_hit_rate"],
-        "full_cap_hit_rate": kvd["hit_rate"]["store_on"]["mfs"][-1]}
-    emit(rows, "largescale.kvreuse.capacity_response",
-         f"{s['kv_hit_rate']:.3f} -> "
-         f"{kvd['capacity_response']['full_cap_hit_rate']:.3f}",
-         "hit rate at 1/4 vs full pooled capacity, mfs, top rate")
-    # WB deferral: mean WB class share on contended links across rates —
-    # lower under MFS (own band below D2D) than under FS/EDF
-    kvd["wb_share_mean"] = {
-        p: (sum(v for v in kvd["wb_share"]["store_on"][p]
-                if v is not None) / max(len(kv_rates), 1))
-        for p in POLICIES}
-    for p in POLICIES:
-        emit(rows, f"largescale.kvreuse.wb_share.{p}",
-             f"{kvd['wb_share_mean'][p]:.3f}",
-             "mean WB share on contended links, store on")
-    # MFS's TTFT advantage with the store on, at the top contended rate
-    top = kvd["ttft"]["store_on"]
-    kvd["mfs_ttft_ratio_at_top"] = {
-        p: top["mfs"][-1] / max(top[p][-1], 1e-9)
-        for p in POLICIES if p != "mfs"}
-    for p, r in sorted(kvd["mfs_ttft_ratio_at_top"].items()):
-        emit(rows, f"largescale.kvreuse.mfs_over_{p}", f"{r:.2f}",
-             f"TTFT attainment ratio at rps{kv_rates[-1]:g}, store on")
-    result["kvreuse"] = kvd
+    # ---- KV-reuse + chunked-prefill arms (see the section functions) ---
+    result["kvreuse"] = _run_kvreuse(rows, quick)
+    result["chunked"] = _run_chunked(rows, quick)
 
     with open(OUT_JSON, "w") as fh:
         json.dump(result, fh, indent=2)

@@ -226,6 +226,30 @@ def _bench_kvstore(rows, quick: bool = False):
          f"{store2.stats['evictions']:.0f} evictions")
 
 
+def _bench_decode_roofline(rows):
+    """Model error of the analytic ``decode_step_time`` against the
+    roofline derived from the decode kernel's actual tiling
+    (``kernels.decode_attention.decode_attention_cost``): padding to
+    block_k / 128 lanes and the attention flops the smooth model drops."""
+    from repro.core.stages import GroupPlan, ParallelismSpec, StageProfile
+    from repro.simcluster.hw import A100
+    from repro.simcluster.papermodels import PAPER_MODELS
+
+    m = PAPER_MODELS["mixtral-8x7b"]
+    prof = StageProfile(m, A100, ParallelismSpec(mode="ep", ep=4),
+                        GroupPlan.build(m.n_layers, 8))
+    errs = []
+    for n in (1, 4, 16, 64):
+        for ctx in (200, 1000, 3000, 4096, 20000):
+            a = prof.decode_step_time(n, ctx)
+            r = prof.decode_step_roofline(n, ctx)
+            errs.append(abs(a - r) / r)
+    emit(rows, "decode.roofline.model_err_mean",
+         f"{sum(errs) / len(errs):.4f}",
+         f"max={max(errs):.4f} over {len(errs)} (n_seqs, ctx) points, "
+         "mixtral-8x7b/A100")
+
+
 def main(quick: bool = False):
     rows = []
     _fig(rows, "fig6_ingress", coll_size=2.0, p2d_size=1.0)   # T=3 -> T=2
@@ -250,6 +274,7 @@ def main(quick: bool = False):
     _bench_incremental(rows, n_events=100 if quick else 400)
     _bench_warmstart(rows, n_events=100 if quick else 300)
     _bench_kvstore(rows, quick=quick)
+    _bench_decode_roofline(rows)
     return rows
 
 

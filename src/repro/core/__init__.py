@@ -32,8 +32,8 @@ from .policies import (
     make_policy,
 )
 from .arbiter import MFSScheduler
-from .stages import (ParallelismSpec, GroupPlan, StageProfile, PrefillItem,
-                     BatchState, StageEmitter)
+from .stages import (ParallelismSpec, GroupPlan, ChunkSpec, ChunkPlan,
+                     StageProfile, PrefillItem, BatchState, StageEmitter)
 from .decode import (DecodePoolSpec, DecodeSpec, DecodeSession, DecodePlane,
                      partition_pools)
 from .kvstore import (TierSpec, KVStoreSpec, HitSegment, HitPlan, KVStore,
@@ -49,8 +49,8 @@ __all__ = [
     "Policy", "SchedView",
     "FairShare", "SJF", "EDF", "Karuna", "LLFOracle", "make_policy",
     "MFSScheduler",
-    "ParallelismSpec", "GroupPlan", "StageProfile", "PrefillItem",
-    "BatchState", "StageEmitter",
+    "ParallelismSpec", "GroupPlan", "ChunkSpec", "ChunkPlan", "StageProfile",
+    "PrefillItem", "BatchState", "StageEmitter",
     "DecodePoolSpec", "DecodeSpec", "DecodeSession", "DecodePlane",
     "partition_pools",
     "TierSpec", "KVStoreSpec", "HitSegment", "HitPlan", "KVStore",

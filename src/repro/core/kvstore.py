@@ -103,6 +103,14 @@ class KVStoreSpec:
     tiers: Tuple[TierSpec, ...] = _DEFAULT_TIERS
     pooled_nodes: int = 1          # fabric endpoints backing the pooled tier
     wb_deadline_scale: float = 8.0  # WB deadline = now + scale x ideal xfer
+    # --- popularity-driven hot-block replication (0 = off) ---
+    # A block resolved at least ``hot_threshold`` times is "hot": admission
+    # and WB completion push copies of it toward additional units' DRAM
+    # (the first unit-scoped writeback tier) until ``hot_copies`` units
+    # hold one locally — production-stack-style prefetch that spreads the
+    # Zipf victim-unit Stage-1 concentration before demand arrives.
+    hot_threshold: int = 0
+    hot_copies: int = 2
 
     def __post_init__(self):
         if not self.tiers or self.tiers[0].scope != "unit":
@@ -219,11 +227,18 @@ class KVStore:
         #: fid -> (keys, tier_idx, loc) for in-flight writebacks
         self._wb: Dict[int, Tuple[Tuple[Hashable, ...], int, int]] = {}
         self._wb_keys: Set[Tuple[Hashable, int, int]] = set()
+        #: per-block resolve popularity driving hot replication
+        self._pop: Dict[Hashable, int] = {}
+        #: replication target: the first unit-scoped writeback tier (DRAM)
+        self._hot_tier: Optional[int] = next(
+            (i for i, t in enumerate(spec.tiers)
+             if t.scope == "unit" and t.writeback), None)
 
         self.stats: Dict[str, float] = {
             "lookups": 0, "hits": 0, "hit_tokens": 0, "lookup_tokens": 0,
             "admitted_blocks": 0, "evictions": 0, "failed_inserts": 0,
             "wb_flows": 0, "wb_bytes": 0.0, "wb_done": 0,
+            "hot_push_flows": 0, "hot_push_bytes": 0.0,
         }
         for t in spec.tiers:
             self.stats[f"hit_tokens_{t.name}"] = 0
@@ -342,6 +357,7 @@ class KVStore:
             pls = self.blocks.get(key)
             if not pls:
                 break
+            self._pop[key] = self._pop.get(key, 0) + 1   # replication signal
             tl = min(pls, key=lambda t: self._rank(t, unit))
             self._touch(key, tl)
             self._pin(key, rid)
@@ -427,20 +443,133 @@ class KVStore:
             self.stats["wb_flows"] += 1
             self.stats["wb_bytes"] += size
             flows.append(f)
+        flows.extend(self._replicate_hot(keys, u, rid, now))
         return flows
 
-    def on_wb_done(self, flow: Flow) -> None:
+    def on_wb_done(self, flow: Flow) -> List[Flow]:
         """A writeback landed: its blocks become resident in the target
-        tier (evicting LRU blocks there as needed) and are unpinned."""
+        tier (evicting LRU blocks there as needed) and are unpinned.
+        Returns follow-on hot-block replication flows (empty unless
+        ``hot_threshold`` is set and the landed blocks are hot) for the
+        runtime to submit."""
         entry = self._wb.pop(flow.fid, None)
         if entry is None:
-            return
+            return []
         keys, tier_idx, loc = entry
         for k in keys:
             self._wb_keys.discard((k, tier_idx, loc))
             self._unpin(k)
             self._insert(k, tier_idx, loc)
         self.stats["wb_done"] += 1
+        src_unit = loc if (0 <= loc < len(self.unit_eps)
+                           and self.spec.tiers[tier_idx].scope == "unit") \
+            else flow.unit
+        return self._replicate_hot(keys, src_unit, flow.rid,
+                                   flow.created if flow.finished is None
+                                   else flow.finished)
+
+    # ---------------------------------------------------- hot replication
+    def _units_with_copy(self, key: Hashable) -> Set[int]:
+        return {loc for tier_idx, loc in self.blocks.get(key, ())
+                if self.spec.tiers[tier_idx].scope == "unit"}
+
+    def _replicate_hot(self, keys: Sequence[Hashable], src_unit: int,
+                       rid: int, now: float) -> List[Flow]:
+        """Popularity-driven push of hot chain blocks toward more units'
+        DRAM: every key resolved ≥ ``hot_threshold`` times gets copies
+        pushed (one Stage-``WB`` flow per target unit, loose derived
+        deadline like any writeback) until ``hot_copies`` units hold one
+        locally — the victim unit stops being every sibling request's only
+        Stage-1 source."""
+        spec = self.spec
+        tier_idx = self._hot_tier
+        if spec.hot_threshold <= 0 or tier_idx is None \
+                or not (0 <= src_unit < len(self.unit_eps)):
+            return []
+        tier = spec.tiers[tier_idx]
+        per_unit: Dict[int, List[Hashable]] = {}
+        for k in keys:
+            if self._pop.get(k, 0) < spec.hot_threshold:
+                continue
+            holders = self._units_with_copy(k)
+            if src_unit not in holders:
+                continue                     # push only what we can source
+            # in-flight pushes count toward the copy target, or concurrent
+            # hot admissions would overshoot hot_copies while one lands
+            inflight = {u for u in range(len(self.unit_eps))
+                        if (k, tier_idx, u) in self._wb_keys}
+            want = spec.hot_copies - len(holders | inflight)
+            if want <= 0:
+                continue
+            # deterministic target order: walk units from src_unit + 1
+            for off in range(1, len(self.unit_eps)):
+                if want <= 0:
+                    break
+                u = (src_unit + off) % len(self.unit_eps)
+                if u in holders or u in inflight:
+                    continue
+                per_unit.setdefault(u, []).append(k)
+                want -= 1
+        flows: List[Flow] = []
+        for u, ks in sorted(per_unit.items()):
+            for k in ks:
+                self._pin(k)
+                self._wb_keys.add((k, tier_idx, u))
+            size = len(ks) * self.block_bytes
+            src = self.unit_eps[src_unit][rid % len(self.unit_eps[src_unit])]
+            dst = self.unit_eps[u][rid % len(self.unit_eps[u])]
+            ref_bw = tier.fetch_bw if tier.fetch_bw > 0 else self.nic_bw
+            f = Flow(new_flow_id(), rid, src_unit, Stage.WB, size,
+                     src=src, dst=dst, target_layer=0, n_layers=1,
+                     deadline=now + spec.wb_deadline_scale * size / ref_bw)
+            f.tier_cap = tier.fetch_bw if tier.fetch_bw > 0 else None
+            self._wb[f.fid] = (tuple(ks), tier_idx, u)
+            self.stats["wb_flows"] += 1
+            self.stats["wb_bytes"] += size
+            self.stats["hot_push_flows"] += 1
+            self.stats["hot_push_bytes"] += size
+            flows.append(f)
+        return flows
+
+    # ------------------------------------------------------------ calibration
+    def steady_state_reuse(self, entries: Sequence[Tuple[Sequence[Hashable],
+                                                         int]]) -> List[int]:
+        """Expected per-request hit tokens at steady state, for store-aware
+        SLO calibration. Replays the chains in arrival order through a
+        *shadow* capacity-bounded LRU over the store's total byte capacity
+        (unit tiers × locations + the pooled tier): a request's expected
+        hit is its chain's leading run of previously-admitted, still-
+        resident blocks. Read-only — live store state, pins and stats are
+        untouched, and the replay ignores placement/tier detail (the base
+        only needs the expected hit *length*)."""
+        total_cap, uncapped = 0.0, False
+        for t in self.spec.tiers:
+            if t.capacity <= 0:
+                uncapped = True
+                continue
+            total_cap += t.capacity * (len(self.unit_eps)
+                                       if t.scope == "unit" else 1)
+        max_blocks = float("inf") if uncapped \
+            else int(total_cap // max(self.block_bytes, 1e-9))
+        bt = self.spec.block_tokens
+        seen: OrderedDict = OrderedDict()
+        out: List[int] = []
+        for keys, max_tokens in entries:
+            hit = 0
+            for key in keys[:max(0, max_tokens) // bt]:
+                if key not in seen:
+                    break
+                hit += bt
+                seen.move_to_end(key)
+            out.append(min(hit, max(0, max_tokens)))
+            for key in keys:
+                if key in seen:
+                    seen.move_to_end(key)
+                else:
+                    seen[key] = True
+                    if len(seen) > max_blocks:
+                        seen.popitem(last=False)
+        return out
 
     # ----------------------------------------------------------- observation
     def sample_contention(self, net: Any, now: float,

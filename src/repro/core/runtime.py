@@ -45,7 +45,8 @@ from .arbiter import MFSScheduler
 from .feasibility import BatchLoad, inter_request_schedule
 from .msflow import Coflow, Flow, FlowState, Stage
 from .policies import Policy
-from .stages import BatchState, PrefillItem, StageEmitter, StageProfile
+from .stages import (BatchState, ChunkPlan, PrefillItem, StageEmitter,
+                     StageProfile)
 
 __all__ = ["RuntimeHost", "MsFlowRuntime", "RuntimeView"]
 
@@ -80,6 +81,13 @@ class RuntimeHost:
     def on_decode_done(self, sess) -> None:
         """Called when a decode session produces its last token (TPOT/TBT
         metrics are final on ``sess``)."""
+
+    def kv_chain_keys(self, item: PrefillItem) -> Tuple:
+        """Block-key chain of the request's reusable prefix (the same keys
+        the host's ``route()`` resolves against the KV store), used by
+        fixed-mode SLO calibration to estimate steady-state hit rates. An
+        empty tuple means "no reusable prefix"."""
+        return ()
 
 
 class RuntimeView:
@@ -117,16 +125,31 @@ class RuntimeView:
         return self.rt.red_ranks.get(rid, 0)
 
     def downstream_estimate(self, flow: Flow) -> float:
-        """Time until the data carried by ``flow`` is actually consumed."""
+        """Time until the data carried by ``flow`` is actually consumed.
+
+        With chunked prefill the current group's contribution tightens from
+        its full compute time to the *remaining chunks* only — policies see
+        sharper laxity as the chunk front advances, so MFS promotion fires
+        earlier for long prompts (monotonically ≤ the group-granular
+        estimate; chunk off reproduces it exactly)."""
         b = self.rt.batch_of_request.get(flow.rid)
         if b is None or b.compute_done_at is not None:
             return 0.0
         if flow.stage == Stage.COLLECTIVE:
             return 0.0                      # blocks the very next step
+        if b.chunk_plan is None:
+            if flow.stage == Stage.KV_REUSE:   # needed when its group starts
+                return sum(b.group_time[b.cur_group:flow.target_layer])
+            rem = len(b.group_time) - b.cur_group
+            return sum(b.group_time[b.cur_group:]) + b.recompute_extra * rem
+        rem_cur = sum(b.chunk_time[b.cur_group][b.cur_chunk:])
         if flow.stage == Stage.KV_REUSE:    # needed when its group starts
-            return sum(b.group_time[b.cur_group:flow.target_layer])
+            if flow.target_layer <= b.cur_group:
+                return 0.0
+            return rem_cur + sum(b.group_time[b.cur_group + 1:flow.target_layer])
         rem = len(b.group_time) - b.cur_group
-        return sum(b.group_time[b.cur_group:]) + b.recompute_extra * rem
+        return rem_cur + sum(b.group_time[b.cur_group + 1:]) \
+            + b.recompute_extra * rem
 
 
 class MsFlowRuntime:
@@ -162,6 +185,13 @@ class MsFlowRuntime:
         #: on prefill completion emits Stage-WB writeback flows through the
         #: same _submit primitive, contending with S1/S2/S3/D2D
         self.kvstore = kvstore
+        #: chunked prefill (Sarathi-style): > 0 splits every super-layer
+        #: group's compute into token-budgeted chunks with per-chunk
+        #: S1/S2/S3 emission; 0 is the legacy group-granular schedule.
+        #: The emitter owns the knob — runtime chunk plans and per-chunk
+        #: recompute accounting must match the emitted flow granularity,
+        #: so there is exactly one source of truth.
+        self.chunk_tokens = getattr(emitter, "chunk_tokens", 0)
         self.view = RuntimeView(self)
 
         # --- per-unit serving state ---
@@ -199,10 +229,30 @@ class MsFlowRuntime:
         (``slo_mode="fixed"``); each request's budget is its own
         ``slo_scale`` (tight/standard/loose class, falling back to the
         cluster default) times that base. Per-request mode derives each
-        deadline from the request's own ideal at admission time instead."""
+        deadline from the request's own ideal at admission time instead.
+
+        **Store-aware calibration**: with a KV-reuse plane attached, actual
+        reuse comes from live store residency — not the trace's pre-sampled
+        ``reuse_len`` — so the base is derived from the *expected
+        steady-state hit* of each request's chain (a capacity-bounded LRU
+        replay, :meth:`KVStore.steady_state_reuse`). Store-on and store-off
+        attainment then measure scheduling against the same notion of
+        achievable low-load TTFT instead of penalising store-on cold
+        starts. Store-off keeps the legacy pre-sampled-reuse base
+        bit-for-bit."""
         if self.slo_mode == "fixed" and items:
-            self._slo_base = float(np.mean([self.profile.ideal_ttft(i)
-                                            for i in items]))
+            if self.kvstore is not None:
+                entries = [(self.host.kv_chain_keys(it),
+                            max(0, it.n_tokens - 1)) for it in items]
+                expected = self.kvstore.steady_state_reuse(entries)
+                self._slo_base = float(np.mean([
+                    self.profile.ideal_ttft(PrefillItem(
+                        rid=-1, arrival=0.0, n_tokens=it.n_tokens,
+                        reuse=min(exp, max(0, it.n_tokens - 1))))
+                    for it, exp in zip(items, expected)]))
+            else:
+                self._slo_base = float(np.mean([self.profile.ideal_ttft(i)
+                                                for i in items]))
         else:
             self._slo_base = None
 
@@ -255,6 +305,12 @@ class MsFlowRuntime:
             group_time=[self.profile.group_compute_time(batch, g)
                         for g in range(self._G)],
             started=self.net.now)
+        if self.chunk_tokens > 0:
+            bs.chunk_plan = ChunkPlan.build(batch, self.chunk_tokens)
+            bs.chunk_time = [
+                [self.profile.chunk_compute_time(batch, bs.chunk_plan, g, c)
+                 for c in range(bs.chunk_plan.n_chunks)]
+                for g in range(self._G)]
         self.active_batch[u] = bs
         for it in batch:
             self.batch_of_request[it.rid] = bs
@@ -268,16 +324,22 @@ class MsFlowRuntime:
         self._resched(("submit",))
 
     def _try_start_group(self, bs: BatchState) -> None:
-        g = bs.cur_group
+        """Start the next cell of the (group, chunk) grid. Stage-1 gates
+        only a group's FIRST chunk (causal attention needs the whole reused
+        prefix before the group's first new token; later chunks depend on
+        the previous chunk's collective instead); without a chunk plan the
+        grid's chunk axis has length 1 and this is the legacy group walk."""
+        g, c = bs.cur_group, bs.cur_chunk
         blocking = set()
-        for gg in range(g + 1):
-            for fid in bs.s1_pending.get(gg, ()):  # still outstanding
-                fl = self.flows[fid]
-                # scavenged (pruned) Stage-1 flows do NOT block the batch:
-                # their reuse is abandoned and recomputed instead (§5:
-                # "requests can be pruned ... to suppress communication")
-                if fl.state not in (FlowState.DONE, FlowState.PRUNED):
-                    blocking.add(fid)
+        if c == 0:
+            for gg in range(g + 1):
+                for fid in bs.s1_pending.get(gg, ()):  # still outstanding
+                    fl = self.flows[fid]
+                    # scavenged (pruned) Stage-1 flows do NOT block the batch:
+                    # their reuse is abandoned and recomputed instead (§5:
+                    # "requests can be pruned ... to suppress communication")
+                    if fl.state not in (FlowState.DONE, FlowState.PRUNED):
+                        blocking.add(fid)
         if blocking:
             bs.phase = "wait_s1"
             if bs.stall_begin is None:
@@ -289,8 +351,12 @@ class MsFlowRuntime:
                 it.stalls += dt
             bs.stall_begin = None
         bs.phase = "compute"
-        dur = bs.group_time[g] + self._recompute_penalty(bs, g)
-        self.evq.push(self.net.now + dur, "compute", (bs.bid, bs.unit, g))
+        if bs.chunk_plan is None:
+            dur = bs.group_time[g] + self._recompute_penalty(bs, g)
+        else:
+            dur = bs.chunk_time[g][c] \
+                + (self._recompute_penalty(bs, g) if c == 0 else 0.0)
+        self.evq.push(self.net.now + dur, "compute", (bs.bid, bs.unit, g, c))
 
     def _recompute_penalty(self, bs: BatchState, g: int) -> float:
         """Compute time to re-derive reused KV that pruning left undelivered.
@@ -305,9 +371,19 @@ class MsFlowRuntime:
                     continue
                 if (fl.rid, gg) in bs.recomputed:
                     continue
-                bs.recomputed.add((fl.rid, gg))
                 it = next(i for i in bs.items if i.rid == fl.rid)
-                frac = fl.remaining / max(fl.size, 1e-9)
+                if self.chunk_tokens > 0:
+                    # chunked S1: the group's fetch is many chunk flows, so
+                    # the (rid, group) is NOT marked done — each pruned
+                    # chunk pays for ITS undelivered bytes relative to the
+                    # request's whole group fetch (fractions over the
+                    # group's chunk flows sum to the undelivered share;
+                    # delivered chunks are never recomputed)
+                    total = it.reuse * self.profile.kv_bytes_group(gg)
+                    frac = fl.remaining / max(total, 1e-9)
+                else:
+                    bs.recomputed.add((fl.rid, gg))
+                    frac = fl.remaining / max(fl.size, 1e-9)
                 extra += self.profile.recompute_time(it.reuse, frac, gg)
                 bs.s1_pending[gg].discard(fid)
                 if fid in self.net.flows:
@@ -361,13 +437,21 @@ class MsFlowRuntime:
         self.host.on_admitted(item)
         self._maybe_start_batch(u)
 
-    def _on_compute_done(self, bid: int, unit: int, g: int) -> None:
+    def _on_compute_done(self, bid: int, unit: int, g: int, c: int = 0) -> None:
         bs = self.active_batch.get(unit)
-        if bs is None or bs.bid != bid or bs.cur_group != g or bs.phase != "compute":
+        if bs is None or bs.bid != bid or bs.cur_group != g \
+                or bs.cur_chunk != c or bs.phase != "compute":
             return   # stale
-        for f in self.emitter.stage3(bs, g, self._t_first_decode):
-            self._submit(f)
-        co = self.emitter.stage2(bs)
+        if bs.chunk_plan is None:
+            for f in self.emitter.stage3(bs, g, self._t_first_decode):
+                self._submit(f)
+            co = self.emitter.stage2(bs)
+        else:
+            # chunked prefill: the chunk's P2D leaves NOW, overlapping the
+            # next chunk's compute; the chunk's collective gates that compute
+            for f in self.emitter.stage3_chunk(bs, g, c, self._t_first_decode):
+                self._submit(f)
+            co = self.emitter.stage2_chunk(bs, g, c)
         if co is not None:
             co.started = self.net.now
             for fl in co.flows:
@@ -381,6 +465,13 @@ class MsFlowRuntime:
         self._resched(("layer", unit))
 
     def _advance_group(self, bs: BatchState) -> None:
+        if bs.chunk_plan is not None \
+                and bs.cur_chunk + 1 < bs.chunk_plan.n_chunks:
+            bs.cur_chunk += 1            # next cell of the chunk grid
+            bs.coll = None
+            self._try_start_group(bs)
+            return
+        bs.cur_chunk = 0
         bs.cur_group += 1
         bs.coll = None
         if bs.cur_group >= self._G:
@@ -440,7 +531,14 @@ class MsFlowRuntime:
         self.policy.on_flow_completed(f, self.view)
         if f.stage == Stage.WB:
             if self.kvstore is not None:
-                self.kvstore.on_wb_done(f)   # blocks land in the target tier
+                # blocks land in the target tier; popularity-driven hot-block
+                # replication may push follow-on WB flows toward more units
+                wbs = self.kvstore.on_wb_done(f)
+                for w in wbs or ():
+                    self._submit(w)
+                if wbs:
+                    self._resched(("submit",))
+                    self._arm_tick()
             self._evict_flow(f)
             return
         if f.stage == Stage.D2D:
@@ -538,7 +636,13 @@ class MsFlowRuntime:
                 loads[it.rid] = v
                 deadlines[it.rid] = it.deadline
             rem_groups = len(bs.group_time) - bs.cur_group
-            comp = sum(bs.group_time[bs.cur_group:]) + bs.recompute_extra * rem_groups
+            if bs.chunk_plan is None:
+                comp = sum(bs.group_time[bs.cur_group:]) \
+                    + bs.recompute_extra * rem_groups
+            else:       # chunk-aware: only the current group's REMAINING
+                comp = sum(bs.chunk_time[bs.cur_group][bs.cur_chunk:]) \
+                    + sum(bs.group_time[bs.cur_group + 1:]) \
+                    + bs.recompute_extra * rem_groups
             batches.append(BatchLoad(bs.bid, loads, deadlines, comp))
         if not batches:
             return

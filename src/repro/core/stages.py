@@ -18,6 +18,12 @@ comes from :class:`StageProfile`, an analytic latency/volume model over an
 ``ArchConfig`` + hardware profile, shared verbatim by simulation and
 serving so both paths emit byte-identical stage sequences for matched
 configurations (the pluggability claim of §5).
+
+With a :class:`ChunkSpec` attached (Sarathi-style chunked prefill) every
+stage is emitted per ``(group, chunk)`` instead of per group: Stage-1
+fetches split at the chunk token budget, each chunk's collective gates the
+next chunk, and chunk-*c* P2D overlaps chunk-*c+1* compute.
+``chunk_tokens=0`` reproduces the group-granular emission bit-for-bit.
 """
 from __future__ import annotations
 
@@ -31,6 +37,8 @@ from .msflow import Coflow, Flow, Stage, new_flow_id
 __all__ = [
     "ParallelismSpec",
     "GroupPlan",
+    "ChunkSpec",
+    "ChunkPlan",
     "StageProfile",
     "PrefillItem",
     "BatchState",
@@ -78,6 +86,98 @@ class GroupPlan:
         return self.groups[g]
 
 
+@dataclass(frozen=True)
+class ChunkSpec:
+    """Sarathi-style chunked prefill configuration (``ClusterSpec.chunk`` /
+    ``DisaggConfig.chunk``).
+
+    ``chunk_tokens`` is the per-batch token budget of one compute chunk:
+    each super-layer group's computation is split into sub-group chunks of
+    at most that many *new* (non-reused) tokens, and Stage-1/2/3 emission
+    happens per chunk — the chunk-*c* P2D overlaps chunk-*c+1* compute and
+    the RLI/downstream estimate tightens to remaining-chunk compute.
+    ``chunk_tokens=0`` (or a ``None`` spec) reproduces the legacy
+    group-granular schedule bit-for-bit.
+    """
+
+    chunk_tokens: int = 2048
+
+
+@dataclass(frozen=True)
+class ChunkPlan:
+    """Token-budgeted sub-group chunks of one prefill batch.
+
+    The batch's *new* tokens (``max(1, n_tokens - reuse)`` per item, in item
+    order) are cut every ``chunk_tokens`` tokens; a chunk may therefore span
+    an item boundary and an item may span several chunks. The chunk axis is
+    shared by every super-layer group — the runtime walks the
+    ``(group, chunk)`` grid group-major, so chunk *c* of group *g* computes
+    after chunk *c*'s collective of group *g-1* and after chunk *c-1* of
+    group *g*.
+
+    Per chunk the plan records, for every item, how many new tokens it
+    contributes (``new_tokens``) and how many of its new tokens were already
+    computed by earlier chunks (``prior_new`` — the attention-context
+    offset). ``first_chunk``/``last_chunk`` give each item's chunk extent:
+    the reused prefix KV ships with the first chunk's P2D (it is available
+    as soon as the group's Stage-1 delivered) and the O(1) recurrent state
+    with the last (it is final only at end of group).
+    """
+
+    chunk_tokens: int
+    new_tokens: Tuple[Tuple[int, ...], ...]    # [chunk][item] -> new tokens
+    prior_new: Tuple[Tuple[int, ...], ...]     # [chunk][item] -> done before
+    first_chunk: Tuple[int, ...]               # [item] -> first chunk index
+    last_chunk: Tuple[int, ...]                # [item] -> last chunk index
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.new_tokens)
+
+    @classmethod
+    def build(cls, items: Sequence["PrefillItem"],
+              chunk_tokens: int) -> Optional["ChunkPlan"]:
+        if chunk_tokens <= 0:
+            return None
+        new = [max(1, it.n_tokens - it.reuse) for it in items]
+        chunks: List[List[int]] = []
+        priors: List[List[int]] = []
+        done = [0] * len(items)
+        left = list(new)
+        while any(left):
+            budget = chunk_tokens
+            row = [0] * len(items)
+            prior = list(done)
+            for i, rem in enumerate(left):
+                if budget <= 0:
+                    break
+                take = min(rem, budget)
+                row[i] = take
+                left[i] -= take
+                done[i] += take
+                budget -= take
+            chunks.append(row)
+            priors.append(prior)
+        first = tuple(next(c for c, row in enumerate(chunks) if row[i] > 0)
+                      for i in range(len(items)))
+        last = tuple(max(c for c, row in enumerate(chunks) if row[i] > 0)
+                     for i in range(len(items)))
+        return cls(chunk_tokens=chunk_tokens,
+                   new_tokens=tuple(tuple(r) for r in chunks),
+                   prior_new=tuple(tuple(p) for p in priors),
+                   first_chunk=first, last_chunk=last)
+
+    def ship_tokens(self, item_idx: int, item: "PrefillItem",
+                    c: int) -> int:
+        """Prompt tokens whose KV ships with chunk ``c``'s P2D for one item:
+        the chunk's new tokens, plus the reused prefix on the item's first
+        chunk (totals telescope to ``item.n_tokens`` across chunks)."""
+        t = self.new_tokens[c][item_idx]
+        if t > 0 and c == self.first_chunk[item_idx]:
+            t += item.n_tokens - max(1, item.n_tokens - item.reuse)
+        return t
+
+
 @dataclass
 class PrefillItem:
     """One request as seen by the runtime: token counts + reuse + deadline.
@@ -120,6 +220,11 @@ class BatchState:
     group_time: List[float]            # compute seconds per super-layer group
     started: float = 0.0
     cur_group: int = 0
+    # chunked prefill: position on the (group, chunk) grid. With no plan the
+    # chunk axis has length 1 and ``cur_chunk`` stays 0 (legacy schedule).
+    cur_chunk: int = 0
+    chunk_plan: Optional[ChunkPlan] = None
+    chunk_time: List[List[float]] = field(default_factory=list)  # [group][chunk]
     phase: str = "wait_s1"             # wait_s1 | compute | wait_coll | drain
     stall_begin: Optional[float] = None
     s1_pending: Dict[int, Set[int]] = field(default_factory=dict)  # group -> fids
@@ -186,6 +291,24 @@ class StageProfile:
             flops += new * m.flops_per_token(ctx) / L * len(self.plan.layers(g))
         return flops / (par.gpus * hw.flops * hw.mfu)
 
+    def chunk_compute_time(self, items: Sequence[PrefillItem],
+                           plan: ChunkPlan, g: int, c: int) -> float:
+        """Analytic compute latency of chunk ``c`` of super-layer group
+        ``g``. Each item's chunk tokens attend over the reused prefix plus
+        the new tokens earlier chunks already computed (midpoint context,
+        as in :meth:`group_compute_time` — for context-linear FLOP models
+        the per-chunk times sum to the group time up to rounding)."""
+        m, hw, par = self.model, self.hw, self.par
+        L = m.n_layers
+        flops = 0.0
+        for i, it in enumerate(items):
+            n_c = plan.new_tokens[c][i]
+            if n_c <= 0:
+                continue
+            ctx = it.reuse + plan.prior_new[c][i] + n_c / 2.0
+            flops += n_c * m.flops_per_token(ctx) / L * len(self.plan.layers(g))
+        return flops / (par.gpus * hw.flops * hw.mfu)
+
     def first_decode_time(self) -> float:
         m, hw, par = self.model, self.hw, self.par
         return 2.0 * m.params_active() / (par.gpus * hw.flops * hw.mfu * 0.3)
@@ -199,6 +322,33 @@ class StageProfile:
             / (hw.flops * hw.mfu)
         mem = m.params_active() * self.kv_dtype_bytes \
             + max(n_seqs, 1) * mean_ctx * self.kv_bytes_per_token()
+        return max(flops_t, mem / (hw.hbm_bw * hw.hbm_eff))
+
+    def decode_step_roofline(self, n_seqs: int, mean_ctx: float, *,
+                             block_k: int = 256) -> float:
+        """Kernel-calibrated counterpart of :meth:`decode_step_time`: the
+        attention term comes from the *actual* decode kernel's tiling
+        (``repro.kernels.decode_attention.decode_attention_cost`` — GQA
+        cache layout, 128-lane head padding, ``block_k`` KV padding,
+        compute-skipped tail blocks) instead of the smooth
+        ``ctx x kv_bytes_per_token`` approximation, and the attention
+        flops the analytic model drops are counted. The slow calibration
+        test + the ``decode.roofline.*`` microbench row record the model
+        error between the two."""
+        from ..kernels.decode_attention import decode_attention_cost
+        m, hw = self.model, self.hw
+        n = max(n_seqs, 1)
+        heads = getattr(m, "n_kv", 0) or getattr(m, "n_heads", 1)
+        hd = getattr(m, "hd", 128)
+        attn_layers = sum(1 for l in range(m.n_layers)
+                          if getattr(m, "layer_kind", lambda _l: "attn")(l)
+                          == "attn")
+        fl, by = decode_attention_cost(n, heads, hd, int(max(mean_ctx, 1)),
+                                       block_k=block_k,
+                                       dtype_bytes=self.kv_dtype_bytes)
+        flops_t = (2.0 * m.params_active() * n + attn_layers * fl) \
+            / (hw.flops * hw.mfu)
+        mem = m.params_active() * self.kv_dtype_bytes + attn_layers * by
         return max(flops_t, mem / (hw.hbm_bw * hw.hbm_eff))
 
     def recompute_time(self, reuse_tokens: int, frac: float, g: int) -> float:
@@ -261,7 +411,8 @@ class StageEmitter:
 
     def __init__(self, profile: StageProfile, unit_eps: Sequence[Sequence[int]],
                  decode_eps: Sequence[int], topo: Any,
-                 pool_eps: Optional[Dict[str, Sequence[int]]] = None):
+                 pool_eps: Optional[Dict[str, Sequence[int]]] = None,
+                 chunk_tokens: int = 0):
         self.profile = profile
         self.par = profile.par
         self.plan = profile.plan
@@ -272,6 +423,11 @@ class StageEmitter:
         self.pool_eps = {k: list(v) for k, v in pool_eps.items()} \
             if pool_eps else None
         self.topo = topo
+        # chunked prefill: Stage-1 fetches split at the chunk token budget
+        # (finer promotion + per-chunk recompute on pruning), Stage-2/3
+        # emitted per (group, chunk) via stage2_chunk/stage3_chunk. 0 keeps
+        # the legacy group-granular emission bit-for-bit.
+        self.chunk_tokens = chunk_tokens
 
     def _decode_eps_for(self, item: PrefillItem) -> List[int]:
         if self.pool_eps is not None:
@@ -296,25 +452,41 @@ class StageEmitter:
                   tier_cap: Optional[float], out: List[Flow]) -> None:
         """Emit group ``g``'s fetch flow(s) for ``tokens`` reused tokens
         sourced from ``src_eps`` (sp mode stripes the slice across the
-        destination unit's endpoints, as for single-source fetches)."""
+        destination unit's endpoints, as for single-source fetches).
+
+        With chunked prefill the fetch is cut at the chunk token budget:
+        every chunk-of-reuse becomes its own flow, so the scheduler promotes
+        pieces independently and pruning recomputes only the chunks that
+        never arrived. All pieces still gate chunk 0 of group ``g`` —
+        causal attention needs the whole prefix before the group's first
+        new token computes."""
         G = len(self.plan)
-        size = tokens * self.profile.kv_bytes_group(g)
-        if size <= 0:
+        if tokens <= 0:
             return
-        if self.par.mode == "sp":
-            ueps = self.unit_eps[bs.unit]
-            dsts = [ueps[(g + i) % len(ueps)] for i in range(self.par.sp)]
-            sizes = [size / self.par.sp] * self.par.sp
+        if self.chunk_tokens > 0:
+            pieces = [self.chunk_tokens] * (tokens // self.chunk_tokens)
+            if tokens % self.chunk_tokens:
+                pieces.append(tokens % self.chunk_tokens)
         else:
-            dsts = [self.rank_endpoint(bs, item, g)]
-            sizes = [size]
-        for dst, sz in zip(dsts, sizes):
-            f = Flow(new_flow_id(), item.rid, bs.unit, Stage.KV_REUSE,
-                     sz, src=src_eps[g % len(src_eps)], dst=dst,
-                     target_layer=g, n_layers=G)
-            f.tier_cap = tier_cap
-            bs.s1_pending.setdefault(g, set()).add(f.fid)
-            out.append(f)
+            pieces = [tokens]
+        for piece in pieces:
+            size = piece * self.profile.kv_bytes_group(g)
+            if size <= 0:
+                return
+            if self.par.mode == "sp":
+                ueps = self.unit_eps[bs.unit]
+                dsts = [ueps[(g + i) % len(ueps)] for i in range(self.par.sp)]
+                sizes = [size / self.par.sp] * self.par.sp
+            else:
+                dsts = [self.rank_endpoint(bs, item, g)]
+                sizes = [size]
+            for dst, sz in zip(dsts, sizes):
+                f = Flow(new_flow_id(), item.rid, bs.unit, Stage.KV_REUSE,
+                         sz, src=src_eps[g % len(src_eps)], dst=dst,
+                         target_layer=g, n_layers=G)
+                f.tier_cap = tier_cap
+                bs.s1_pending.setdefault(g, set()).add(f.fid)
+                out.append(f)
 
     def stage1(self, bs: BatchState) -> List[Flow]:
         """Per-layer-group KV-reuse fetch flows.
@@ -348,10 +520,26 @@ class StageEmitter:
     # -------------------------------------------------------------- stage 2
     def stage2(self, bs: BatchState) -> Optional[Coflow]:
         """Collective coflow of the current group (gates the next group)."""
+        tokens_new = sum(max(1, it.n_tokens - it.reuse) for it in bs.items)
+        tokens_seq = sum(it.n_tokens for it in bs.items)
+        return self._stage2(bs, bs.cur_group, tokens_new, tokens_seq)
+
+    def stage2_chunk(self, bs: BatchState, g: int, c: int) -> Optional[Coflow]:
+        """Collective coflow of chunk ``c`` of group ``g`` (gates chunk
+        ``c+1``'s compute — each chunk's forward pass runs its own
+        all-to-all / ring exchange over the chunk's tokens). Chunk volumes
+        telescope to the legacy group totals: new tokens go to their chunk,
+        the reused prefix share rides the owning item's first chunk."""
+        plan = bs.chunk_plan
+        tokens_new = sum(plan.new_tokens[c])
+        tokens_seq = sum(plan.ship_tokens(i, it, c)
+                         for i, it in enumerate(bs.items))
+        return self._stage2(bs, g, tokens_new, tokens_seq)
+
+    def _stage2(self, bs: BatchState, g: int, tokens: int,
+                tokens_seq: int) -> Optional[Coflow]:
         par, profile = self.par, self.profile
-        g = bs.cur_group
         G = len(self.plan)
-        tokens = sum(max(1, it.n_tokens - it.reuse) for it in bs.items)
         eps = self.unit_eps[bs.unit]
         co = Coflow(cid=new_flow_id(), rid=bs.items[0].rid, unit=bs.unit,
                     stage=Stage.COLLECTIVE, layer=g)
@@ -374,8 +562,7 @@ class StageEmitter:
                     fl.coflow = co.cid
                     co.flows.append(fl)
         elif par.mode == "sp":
-            vol = profile.stage2_volume_per_ep(
-                sum(it.n_tokens for it in bs.items), g)
+            vol = profile.stage2_volume_per_ep(tokens_seq, g)
             if vol <= 0:
                 return None
             sp, tp = par.sp, par.tp
@@ -421,6 +608,40 @@ class StageEmitter:
             # Flow-level deadline = TTFT deadline minus remaining downstream
             # work (the first decode step) — the paper's "global TTFT
             # materialises into an explicit flow-level bound" (§3.2).
+            f = Flow(new_flow_id(), item.rid, bs.unit, Stage.P2D, size,
+                     src=self.rank_endpoint(bs, item, g), dst=dst,
+                     target_layer=g, n_layers=G,
+                     deadline=item.deadline - t_first_decode)
+            bs.p2d_pending[item.rid].add(f.fid)
+            out.append(f)
+        return out
+
+    def stage3_chunk(self, bs: BatchState, g: int, c: int,
+                     t_first_decode: float) -> List[Flow]:
+        """P2D flows for chunk ``c`` of group ``g`` — the chunk's share of
+        the group's produced KV leaves while later chunks still compute.
+
+        Per item the chunk ships its new tokens' KV, plus the reused
+        prefix's group-``g`` KV with the item's first chunk (available once
+        the group's Stage-1 delivered) and the O(1) recurrent state with
+        its last chunk (final only at end of group), so per-request totals
+        and deadlines match :meth:`stage3` exactly. All of one item's
+        chunks target the same decode endpoint — a request's group KV must
+        land on one unit."""
+        plan = bs.chunk_plan
+        G = len(self.plan)
+        kvb = self.profile.kv_bytes_group(g)
+        state_b = self.profile.state_bytes_group()
+        out: List[Flow] = []
+        for i, item in enumerate(bs.items):
+            size = plan.ship_tokens(i, item, c) * kvb
+            if c == plan.last_chunk[i]:
+                size += state_b
+            if size <= 0:
+                continue
+            deps = self._decode_eps_for(item)
+            dst = deps[(item.rid + g) % len(deps)] \
+                if deps else self.rank_endpoint(bs, item, g)
             f = Flow(new_flow_id(), item.rid, bs.unit, Stage.P2D, size,
                      src=self.rank_endpoint(bs, item, g), dst=dst,
                      target_layer=g, n_layers=G,

@@ -25,7 +25,34 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["decode_attention"]
+__all__ = ["decode_attention", "decode_attention_cost"]
+
+
+def decode_attention_cost(n_seqs: int, n_heads: int, head_dim: int,
+                          ctx: int, *, block_k: int = 256,
+                          dtype_bytes: int = 2) -> tuple:
+    """Per-layer (flops, hbm_bytes) of one batched decode-attention step,
+    derived from THIS kernel's actual tiling — the measured roofline that
+    ``StageProfile.decode_step_roofline`` calibrates the analytic
+    ``decode_step_time`` against.
+
+    Mirrors the launch math above exactly: the head dim pads to a multiple
+    of 128 lanes, the KV axis pads to ``block_k``, and blocks entirely
+    beyond ``ctx`` are compute-skipped (``@pl.when``) — so per sequence
+    ``ceil(ctx / block_k)`` KV blocks are streamed from HBM and hit the
+    MXU. Per touched block each head runs the [H, Dp] x [Dp, bk] logits
+    matmul and the [H, bk] x [bk, Dp] update (4 * H * Dp * bk flops); HBM
+    traffic is the K and V tiles plus the q read and output write. Pure
+    math (no JAX), usable by the control plane.
+    """
+    S = max(int(ctx), 1)
+    bk = min(block_k, max(128, S))
+    Dp = head_dim + (-head_dim) % 128
+    n_blocks = -(-S // bk)                       # compute-skip beyond ctx
+    flops = n_seqs * n_blocks * 4.0 * n_heads * Dp * bk
+    hbm = n_seqs * (2.0 * n_blocks * bk * n_heads * Dp * dtype_bytes  # K+V
+                    + 2.0 * n_heads * Dp * dtype_bytes)               # q+out
+    return flops, hbm
 
 _NEG_INF = -1e30
 

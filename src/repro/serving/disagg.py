@@ -45,6 +45,8 @@ import math
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from ..core import MFSScheduler, Policy
@@ -52,7 +54,7 @@ from ..core.decode import (DecodePlane, DecodeSession, DecodeSpec,
                            partition_pools)
 from ..core.kvstore import KVStore, KVStoreSpec, content_chain, kv_route
 from ..core.runtime import MsFlowRuntime, RuntimeHost
-from ..core.stages import (BatchState, GroupPlan, ParallelismSpec,
+from ..core.stages import (BatchState, ChunkSpec, GroupPlan, ParallelismSpec,
                            PrefillItem, StageEmitter, StageProfile)
 from ..netsim.events import EventQueue
 from ..netsim.fluid import FluidNet
@@ -113,6 +115,14 @@ class DisaggConfig:
     # content-addressed PrefixIndex stays the *data-plane* page map that
     # materialises real prefix caches when it can cover the modeled hit.
     kvstore: Optional[KVStoreSpec] = None
+    # chunked prefill: the modeled clock walks the (group, chunk) grid with
+    # per-chunk S1/S2/S3 emission, and the data plane materialises paged
+    # prefix caches in chunk slices (PagedStore.gather_slice) instead of
+    # one monolithic gather. None (or chunk_tokens=0) = legacy schedule.
+    chunk: Optional[ChunkSpec] = None
+
+    def chunk_tokens(self) -> int:
+        return self.chunk.chunk_tokens if self.chunk is not None else 0
 
 
 @dataclass
@@ -179,7 +189,8 @@ class DisaggServer(RuntimeHost):
                                             pool_eps, seed=0)
         emitter = StageEmitter(self.profile, unit_eps,
                                decode_eps=decode_eps, topo=self.topo,
-                               pool_eps=pool_eps)
+                               pool_eps=pool_eps,
+                               chunk_tokens=cfg.chunk_tokens())
         self.runtime = MsFlowRuntime(
             self.topo, FluidNet(self.topo), EventQueue(), self.policy,
             self.profile, emitter, host=self, n_units=cfg.n_prefill_units,
@@ -246,6 +257,13 @@ class DisaggServer(RuntimeHost):
         item.owner_unit = owner if owner is not None else best
         return best
 
+    def kv_chain_keys(self, item: PrefillItem):
+        # store-aware SLO calibration: the same keys route() resolves
+        if self.kvstore is None:
+            return ()
+        job: _ServeJob = item.payload
+        return content_chain(job.req.tokens, self.kvstore.spec.block_tokens)
+
     def on_batch_started(self, bs: BatchState) -> None:
         # REAL compute (results are exact; the virtual clock runs on the
         # shared analytic profile). The prefix pages are host-local, so the
@@ -269,9 +287,23 @@ class DisaggServer(RuntimeHost):
         so paged entries are sliced down to the modeled hit and anything
         the index cannot cover is recomputed by the real prefill (results
         stay exact; the virtual clock already charged the modeled hit).
+
+        With chunked prefill the paged prefix is materialised in
+        ``chunk_tokens`` slices (``PagedStore.gather_slice``) and stitched
+        along the token axis — the data-plane mirror of the per-chunk
+        Stage-1 arrival granularity the modeled clock schedules.
         """
         if entry is None or reuse <= 0:
             return None
+        ct = self.cfg.chunk_tokens()
+        if entry.pages and ct > 0:
+            bounds = list(range(0, reuse, ct)) + [reuse]
+            slices = [self.store.gather_slice(entry.pages, a, b)
+                      for a, b in zip(bounds, bounds[1:])]
+            if len(slices) == 1:
+                return slices[0]
+            return jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs, axis=2), *slices)
         if entry.n_tokens == reuse:
             return self.index.fetch(entry)
         if entry.pages and entry.n_tokens > reuse:

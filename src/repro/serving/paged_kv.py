@@ -161,6 +161,28 @@ class PagedStore:
             out.append(x[:, None])                    # restore B=1
         return jax.tree_util.tree_unflatten(self._treedef, out)
 
+    def gather_slice(self, pages: Sequence[int], start: int, end: int) -> Any:
+        """Rebuild a (B=1) cache pytree covering tokens ``[start, end)``
+        only — the chunk-sliced materialisation chunked prefill uses to
+        build a prefix cache piecewise (one slice per arrived Stage-1
+        chunk) instead of one monolithic gather. Only the pages overlapping
+        the slice are touched; concatenating consecutive slices along the
+        token axis reproduces :meth:`gather` exactly."""
+        if self._treedef is None:
+            raise RuntimeError("gather_slice before any put")
+        if not 0 <= start < end:
+            raise ValueError(f"bad token slice [{start}, {end})")
+        ps = self.page_size
+        p0, p1 = start // ps, -(-end // ps)
+        idx = jnp.asarray(list(pages)[p0:p1], jnp.int32)
+        off = start - p0 * ps
+        out = []
+        for key in self._keys:
+            x = jnp.take(self._pools[key], idx, axis=1)
+            x = x.reshape(x.shape[0], -1, *x.shape[3:])[:, off:off + end - start]
+            out.append(x[:, None])                    # restore B=1
+        return jax.tree_util.tree_unflatten(self._treedef, out)
+
     def release(self, pages: Sequence[int]) -> None:
         self.alloc.release(pages)
 

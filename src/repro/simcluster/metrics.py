@@ -44,6 +44,7 @@ class SimMetrics:
     arrival: Dict[int, float] = field(default_factory=dict)
     ideal_ttft: Dict[int, float] = field(default_factory=dict)
     stall_time: Dict[int, float] = field(default_factory=dict)
+    prompt_tokens: Dict[int, int] = field(default_factory=dict)
     coflows: List[CoflowRecord] = field(default_factory=list)
     pruned: int = 0
     # --- decode plane (empty when no DecodePlane is attached) ---
@@ -76,6 +77,21 @@ class SimMetrics:
             return {}
         return {"mean": float(v.mean()), "p50": float(np.percentile(v, 50)),
                 "p90": float(np.percentile(v, 90)), "p99": float(np.percentile(v, 99))}
+
+    def long_prompt_stats(self, min_tokens: int) -> Dict[str, float]:
+        """Mean TTFT + SLO attainment of the long-prompt class (prompts of
+        at least ``min_tokens``) — the head-of-line-blocking victims chunked
+        prefill exists to help."""
+        rids = [r for r in self._rids()
+                if self.prompt_tokens.get(r, 0) >= min_tokens]
+        if not rids:
+            return {"n": 0, "ttft_mean": float("nan"),
+                    "ttft_p99": float("nan"), "attainment": float("nan")}
+        v = np.array([self.ttft[r] for r in rids])
+        ok = sum(1 for r in rids if self.ttft[r] <= self.deadline[r] + 1e-9)
+        return {"n": len(rids), "ttft_mean": float(v.mean()),
+                "ttft_p99": float(np.percentile(v, 99)),
+                "attainment": ok / len(rids)}
 
     def normalized_ttft(self) -> float:
         """Mean TTFT / mean ideal TTFT (contention inflation factor)."""

@@ -36,15 +36,15 @@ from ..core.decode import (DecodePlane, DecodeSession, DecodeSpec,
                            partition_pools)
 from ..core.kvstore import KVStore, KVStoreSpec, chain_keys, kv_route
 from ..core.runtime import MsFlowRuntime, RuntimeHost
-from ..core.stages import (BatchState, GroupPlan, ParallelismSpec,
+from ..core.stages import (BatchState, ChunkSpec, GroupPlan, ParallelismSpec,
                            PrefillItem, StageEmitter, StageProfile)
 from ..netsim import EventQueue, FatTree, FluidNet, SingleToR, Topology
 from .hw import HW, A100
 from .metrics import CoflowRecord, SimMetrics
 from .trace import Request
 
-__all__ = ["ParallelismSpec", "ClusterSpec", "ClusterSim", "DecodeSpec",
-           "KVStoreSpec"]
+__all__ = ["ParallelismSpec", "ClusterSpec", "ClusterSim", "ChunkSpec",
+           "DecodeSpec", "KVStoreSpec"]
 
 
 @dataclass
@@ -75,6 +75,15 @@ class ClusterSpec:
     # against the live tiered store, S1 becomes multi-source, and prefill
     # completion emits Stage-WB writeback flows.
     kvstore: Optional[KVStoreSpec] = None
+    # chunked prefill (None = legacy group-granular schedule, bit-identical
+    # to pre-chunking runs). With a spec attached every super-layer group's
+    # compute is split into token-budgeted chunks and S1/S2/S3 are emitted
+    # per chunk (chunk-c P2D overlaps chunk-c+1 compute; RLI tightens to
+    # remaining-chunk compute). ``ChunkSpec(chunk_tokens=0)`` is also legacy.
+    chunk: Optional[ChunkSpec] = None
+
+    def chunk_tokens(self) -> int:
+        return self.chunk.chunk_tokens if self.chunk is not None else 0
 
     def n_groups(self) -> int:
         if self.layer_groups:
@@ -137,7 +146,8 @@ class ClusterSim(RuntimeHost):
             self.decode_plane = DecodePlane(spec.decode, self.profile,
                                             pool_eps, seed=seed)
         emitter = StageEmitter(self.profile, unit_eps, decode_eps, self.topo,
-                               pool_eps=pool_eps)
+                               pool_eps=pool_eps,
+                               chunk_tokens=spec.chunk_tokens())
         self.runtime = MsFlowRuntime(
             self.topo, FluidNet(self.topo), EventQueue(), policy,
             self.profile, emitter, host=self, n_units=spec.n_units,
@@ -184,12 +194,19 @@ class ClusterSim(RuntimeHost):
                 best, best_score = u, score
         return best
 
+    def kv_chain_keys(self, item: PrefillItem):
+        # store-aware SLO calibration: the same keys route() resolves
+        r: Request = item.payload
+        return chain_keys(r.prefix_chain, self.kvstore.spec.block_tokens) \
+            if self.kvstore is not None else ()
+
     def on_admitted(self, item: PrefillItem) -> None:
         r: Request = item.payload
         r.unit = item.unit
         r.deadline = item.deadline
         r.ideal_ttft = item.ideal_ttft
         self.metrics.arrival[r.rid] = r.arrival
+        self.metrics.prompt_tokens[r.rid] = item.n_tokens
         # metrics store the *relative* TTFT budget (deadline - arrival) so it
         # compares directly against the recorded (relative) TTFT
         self.metrics.deadline[r.rid] = item.deadline - item.arrival

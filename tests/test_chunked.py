@@ -1,0 +1,254 @@
+"""Chunked prefill: sub-group (group, chunk) stage emission.
+
+Covers the ISSUE-5 chunk semantics: ``chunk_tokens=0`` must reproduce the
+legacy group-granular schedule bit-for-bit, per-chunk emission must
+preserve per-request volume/deadline totals, the RLI/downstream estimate
+must tighten monotonically as the chunk front advances, chunk-boundary
+recompute must interact correctly with Algorithm-1 pruning, and the
+cluster simulator and the real-JAX serving path must emit identical
+chunk-level stage traces for matched configs.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Stage, make_policy
+from repro.core.stages import ChunkPlan, ChunkSpec, PrefillItem
+from repro.simcluster.hw import A100, HW
+from repro.simcluster.papermodels import PAPER_MODELS
+from repro.simcluster.sim import ClusterSim, ClusterSpec, ParallelismSpec
+from repro.simcluster.trace import WORKLOADS, Request, generate_trace
+
+MODEL = PAPER_MODELS["mixtral-8x7b"]
+
+
+def _spec(chunk=None, **kw):
+    kw.setdefault("par", ParallelismSpec(mode="ep", ep=2))
+    kw.setdefault("n_units", 2)
+    kw.setdefault("gpus_per_server", 2)
+    kw.setdefault("layer_groups", 4)
+    kw.setdefault("hw", A100)
+    return ClusterSpec(model=MODEL, chunk=chunk, **kw)
+
+
+# ------------------------------------------------------------- plan algebra
+def test_chunk_plan_cuts_the_batch_token_string():
+    items = [PrefillItem(rid=0, arrival=0, n_tokens=900, reuse=100),
+             PrefillItem(rid=1, arrival=0, n_tokens=500, reuse=500),
+             PrefillItem(rid=2, arrival=0, n_tokens=300, reuse=0)]
+    plan = ChunkPlan.build(items, 256)
+    assert plan is not None
+    # new tokens: 800 + 1 (fully reused floor) + 300 = 1101 -> 5 chunks
+    assert plan.n_chunks == 5
+    for i, it in enumerate(items):
+        new = max(1, it.n_tokens - it.reuse)
+        assert sum(plan.new_tokens[c][i] for c in range(plan.n_chunks)) == new
+        # prior_new counts exactly the tokens earlier chunks computed
+        acc = 0
+        for c in range(plan.n_chunks):
+            if plan.new_tokens[c][i]:
+                assert plan.prior_new[c][i] == acc
+            acc += plan.new_tokens[c][i]
+        assert plan.first_chunk[i] <= plan.last_chunk[i]
+        # P2D ship totals telescope to the full prompt
+        assert sum(plan.ship_tokens(i, it, c)
+                   for c in range(plan.n_chunks)) == it.n_tokens
+    # every chunk except possibly the last is exactly the token budget
+    for c in range(plan.n_chunks - 1):
+        assert sum(plan.new_tokens[c]) == 256
+
+
+def test_chunk_plan_disabled():
+    items = [PrefillItem(rid=0, arrival=0, n_tokens=128, reuse=0)]
+    assert ChunkPlan.build(items, 0) is None
+
+
+# ------------------------------------------------- chunk off == legacy, bit
+def test_chunk_off_is_bit_identical_to_legacy():
+    """ChunkSpec(chunk_tokens=0) and chunk=None must take the exact legacy
+    code path: identical stage logs (sizes, deadlines) and TTFTs."""
+    trace = generate_trace(WORKLOADS["qwen-conv"], 30, rps=40.0, seed=0,
+                           warmup=4)
+    logs, ttfts = [], []
+    for chunk in (None, ChunkSpec(chunk_tokens=0)):
+        sim = ClusterSim(_spec(chunk), make_policy("mfs"))
+        sim.runtime.trace_stages = True
+        m = sim.run(trace)
+        logs.append(list(sim.runtime.stage_log))
+        ttfts.append(dict(m.ttft))
+    assert logs[0] == logs[1]
+    assert ttfts[0] == ttfts[1]
+
+
+# ------------------------------------------------------- emission totals
+def test_chunked_emission_preserves_per_request_totals():
+    """Per-chunk S1/S2/S3 must telescope to the legacy per-request group
+    totals: same P2D bytes and deadline per rid, same S1 fetch bytes, more
+    (smaller) flows."""
+    trace = [Request(rid=0, arrival=0.0, prompt_len=1500, reuse_len=600,
+                     prefix_id=0),
+             Request(rid=1, arrival=0.0, prompt_len=700, reuse_len=0,
+                     prefix_id=1)]
+    out = {}
+    for name, chunk in (("legacy", None), ("chunked", ChunkSpec(256))):
+        sim = ClusterSim(_spec(chunk, n_units=1), make_policy("fs"))
+        sim.runtime.trace_stages = True
+        sim.run([Request(**{k: getattr(r, k) for k in
+                            ("rid", "arrival", "prompt_len", "reuse_len",
+                             "prefix_id")}) for r in trace])
+        out[name] = list(sim.runtime.stage_log)
+
+    def totals(log, stage):
+        t = {}
+        for rid, s, g, size, dl in log:
+            if s == stage:
+                t[(rid, g)] = t.get((rid, g), 0.0) + size
+        return t
+
+    for stage in (Stage.KV_REUSE, Stage.P2D):
+        leg, chk = totals(out["legacy"], stage), totals(out["chunked"], stage)
+        assert set(leg) == set(chk)
+        for k in leg:
+            assert chk[k] == pytest.approx(leg[k], rel=1e-9), (stage, k)
+    # deadlines are identical per request (chunk P2D carries the same
+    # derived TTFT deadline as the group it belongs to)
+    leg_dl = {(r, g): dl for r, s, g, _, dl in out["legacy"] if s == Stage.P2D}
+    for r, s, g, _, dl in out["chunked"]:
+        if s == Stage.P2D:
+            assert dl == pytest.approx(leg_dl[(r, g)], rel=1e-12)
+    # and chunking actually split something
+    n_leg = sum(1 for e in out["legacy"] if e[1] == Stage.P2D)
+    n_chk = sum(1 for e in out["chunked"] if e[1] == Stage.P2D)
+    assert n_chk > n_leg
+
+
+# --------------------------------------------------------- RLI tightening
+def test_chunked_downstream_estimate_tightens_monotonically():
+    """The downstream estimate seen by policies must be monotonically <=
+    the group-granular estimate and non-increasing across the chunk front
+    within a group (sharper laxity -> earlier MFS promotion)."""
+    req = [Request(rid=0, arrival=0.0, prompt_len=2048, reuse_len=0,
+                   prefix_id=0)]
+    est = {}
+    for name, chunk in (("legacy", None), ("chunked", ChunkSpec(256))):
+        sim = ClusterSim(_spec(chunk, n_units=1), make_policy("fs"))
+        rec = []
+        orig = sim.runtime.policy.on_flow_submitted
+        def spy(flow, view, _orig=orig, _rec=rec):
+            if flow.stage == Stage.P2D:
+                _rec.append((flow.target_layer,
+                             view.downstream_estimate(flow)))
+            return _orig(flow, view)
+        sim.runtime.policy.on_flow_submitted = spy
+        sim.run(req)
+        est[name] = rec
+    leg = dict(est["legacy"])           # one estimate per group
+    by_group = {}
+    for g, e in est["chunked"]:
+        by_group.setdefault(g, []).append(e)
+    assert set(by_group) == set(leg)
+    for g, chain in by_group.items():
+        assert len(chain) > 1           # chunking split the group
+        # monotone non-increasing across chunks of one group
+        assert all(a >= b - 1e-15 for a, b in zip(chain, chain[1:]))
+        # never looser than the group-granular estimate...
+        assert max(chain) <= leg[g] * (1 + 1e-9) + 1e-15
+        # ...and strictly tighter once the chunk front has advanced
+        assert chain[-1] < leg[g] * (1 - 1e-6)
+
+
+# ---------------------------------------- chunk-boundary recompute / prune
+def test_chunked_prune_recomputes_only_undelivered_chunks():
+    """Under overload, Algorithm-1 pruning demotes Stage-1 chunk flows to
+    the scavenger class; the batch must proceed, charging recompute for the
+    undelivered chunk bytes only — every request still completes, and the
+    total recompute charged never exceeds the whole-reuse legacy bound."""
+    slow = HW("slow", flops=A100.flops, hbm_bw=A100.hbm_bw,
+              nic_bw=2e7, scaleup_bw=A100.scaleup_bw)
+    reqs = [Request(rid=i, arrival=i * 1e-4, prompt_len=1024,
+                    reuse_len=512, prefix_id=(i + 1) % 2)
+            for i in range(6)]
+    sim = ClusterSim(_spec(ChunkSpec(128), hw=slow, slo_scale=1.0,
+                           slo_mode="per-request"), make_policy("mfs"))
+    charged = []
+    orig = sim.profile.recompute_time
+    sim.profile.recompute_time = \
+        lambda reuse, frac, g: charged.append((reuse, frac, g)) \
+        or orig(reuse, frac, g)
+    m = sim.run(reqs)
+    assert sim.runtime.n_pruned > 0
+    assert len(m.ttft) == len(reqs)     # soft: nothing dropped
+    assert charged, "pruning never charged a recompute"
+    for reuse, frac, g in charged:
+        # per-chunk accounting: each pruned chunk flow pays its own share
+        # of the group fetch, never more than the whole reuse
+        assert 0.0 < frac <= 1.0 + 1e-9
+    # fractions per (group) sum to at most the whole fetch per request
+    by_g = {}
+    for reuse, frac, g in charged:
+        by_g[g] = by_g.get(g, 0.0) + frac
+    assert all(v <= len(reqs) + 1e-9 for v in by_g.values())
+
+
+# ----------------------------------------------------- sim <-> serve parity
+@pytest.mark.slow
+def test_sim_and_serve_emit_identical_chunk_stage_traces():
+    """Chunk-level parity: matched configs, chunking ON — both hosts must
+    emit identical (stage, group, size, deadline) sequences, with several
+    P2D flows per group."""
+    import jax
+
+    from repro.configs import SMOKES
+    from repro.models.lm import build_model
+    from repro.serving import DisaggConfig, DisaggServer, ServeRequest
+
+    cfg = SMOKES["smollm-360m"]
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab, size=(32,))
+    suffix = rng.integers(0, cfg.vocab, size=(12,))
+
+    srv = DisaggServer(model, params, cfg=DisaggConfig(
+        n_prefill_units=1, gpus_per_unit=1, layer_groups=2, hw=A100,
+        n_pages=128, chunk=ChunkSpec(chunk_tokens=16)))
+    srv.runtime.trace_stages = True
+    res = srv.serve([
+        ServeRequest(rid=0, arrival=0.0, tokens=prefix, max_new=1),
+        ServeRequest(rid=1, arrival=0.05,
+                     tokens=np.concatenate([prefix, suffix]), max_new=1),
+    ])
+    assert res[1].reused_tokens == 32
+
+    spec = ClusterSpec(model=cfg, par=ParallelismSpec(mode="ep", ep=1),
+                       n_units=1, gpus_per_server=1, layer_groups=2,
+                       slo_mode="per-request", hw=A100,
+                       chunk=ChunkSpec(chunk_tokens=16))
+    sim = ClusterSim(spec, make_policy("mfs"))
+    sim.runtime.trace_stages = True
+    sim.run([
+        Request(rid=0, arrival=0.0, prompt_len=32, reuse_len=0, prefix_id=0),
+        Request(rid=1, arrival=0.05, prompt_len=44, reuse_len=32, prefix_id=0),
+    ])
+
+    def trace(log, rid):
+        return [(stage, group, size, deadline)
+                for r, stage, group, size, deadline in log if r == rid]
+
+    for rid in (0, 1):
+        got, want = trace(srv.runtime.stage_log, rid), \
+            trace(sim.runtime.stage_log, rid)
+        assert len(got) == len(want) > 0
+        for (s_a, g_a, sz_a, dl_a), (s_b, g_b, sz_b, dl_b) in zip(got, want):
+            assert (s_a, g_a) == (s_b, g_b)
+            assert sz_a == pytest.approx(sz_b, rel=1e-12)
+            if dl_a is None or dl_b is None:
+                assert dl_a == dl_b
+            else:
+                assert dl_a == pytest.approx(dl_b, rel=1e-12)
+    # chunking really split the emission: rid 0 (32 tokens, 16-token chunks)
+    # must ship two P2D flows per group
+    p2d_per_group = {}
+    for s, g, _, _ in trace(srv.runtime.stage_log, 0):
+        if s == Stage.P2D:
+            p2d_per_group[g] = p2d_per_group.get(g, 0) + 1
+    assert set(p2d_per_group.values()) == {2}

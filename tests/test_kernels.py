@@ -225,3 +225,45 @@ def test_ssd_dual_matches_recurrence():
                          chunk=32)[0] ** 2))(x)
         np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
                                    atol=1e-2, rtol=1e-2)
+
+
+@pytest.mark.slow
+def test_decode_step_time_calibrated_against_kernel_roofline():
+    """`StageProfile.decode_step_time` (the smooth analytic model the decode
+    plane schedules with) must track the roofline derived from the decode
+    kernel's ACTUAL tiling (`decode_attention_cost`: 128-lane head padding,
+    block_k KV padding, compute-skipped tail blocks, counted attention
+    flops) within a tight relative error — including context lengths that
+    straddle block boundaries, where the kernel pays for padding the model
+    ignores."""
+    from repro.kernels.decode_attention import decode_attention_cost
+    from repro.core.stages import GroupPlan, ParallelismSpec, StageProfile
+    from repro.simcluster.hw import A100
+    from repro.simcluster.papermodels import PAPER_MODELS
+
+    # the cost mirror must track the real kernel's launch math: run the
+    # kernel once (interpret) at an off-block context and check the mirror
+    # counted exactly the touched KV blocks
+    B, H, D, S = 2, 4, 64, 300
+    q = jnp.zeros((B, H, D), jnp.float32)
+    k = v = jnp.zeros((B, S, H, D), jnp.float32)
+    out = decode_attention(q, k, v, jnp.array([300, 10], jnp.int32),
+                           interpret=True, block_k=256)
+    assert out.shape == (B, H, D)
+    fl, by = decode_attention_cost(1, H, D, 300, block_k=256, dtype_bytes=4)
+    # ctx=300 pads to 2 x 256-blocks of 128-lane-padded heads
+    assert by == 2 * 2 * 256 * H * 128 * 4 + 2 * H * 128 * 4
+    assert fl == 2 * 4.0 * H * 128 * 256
+
+    m = PAPER_MODELS["mixtral-8x7b"]
+    prof = StageProfile(m, A100, ParallelismSpec(mode="ep", ep=4),
+                        GroupPlan.build(m.n_layers, 8))
+    errs = []
+    for n in (1, 4, 16, 64):
+        for ctx in (200, 1000, 3000, 4096, 20000):
+            a = prof.decode_step_time(n, ctx)
+            r = prof.decode_step_roofline(n, ctx)
+            errs.append(abs(a - r) / r)
+            # padding and attention flops only ever ADD work
+            assert r >= a * (1 - 1e-9)
+    assert max(errs) < 0.15, f"decode model error {max(errs):.3f}"
