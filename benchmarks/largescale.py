@@ -47,12 +47,24 @@ long-prompt class (>= 32k tokens) sheds its un-overlapped last-group KV
 tail — ``largescale.chunked.long_ttft_gain.*`` records the per-policy
 long-prompt mean-TTFT improvement.
 
+The **router arm** sweeps the router plane on the 8-unit paper cluster:
+every registered placement policy x {mfs, edf, fs} schedulers x 2 rates
+under a hard MMPP overload burst (the regime where placement quality and
+admission control decide attainment). The matrix reports all-arrivals SLO
+attainment per (router, scheduler, rate) plus MFS-vs-baseline ratios per
+router; the admission half reruns the top burst rate with the default
+``kv_affinity`` router, shed-nothing vs. a queue-depth admission
+controller shedding loose-class traffic — admitted-TTFT attainment must
+improve for every scheduler (``largescale.router.admission.*``).
+
 Emits CSV rows (``largescale.*``) plus ``BENCH_largescale.json`` with the
 full curve data for plotting, and the fluid-net incremental-allocation
 counters (group fills per reallocation) observed during the sweep. With
-the decode plane, KV store and chunking disabled the legacy sections are
-bit-for-bit identical to the pre-decode-plane / pre-kvstore /
-pre-chunking sweeps.
+the decode plane, KV store, chunking and the router spec disabled the
+legacy sections are bit-for-bit identical to the pre-decode-plane /
+pre-kvstore / pre-chunking / pre-router sweeps. ``--only router``
+recomputes just the router arm and merges it into an existing
+``BENCH_largescale.json``, leaving every other section untouched.
 """
 from __future__ import annotations
 
@@ -63,6 +75,7 @@ from typing import Dict, List, Optional
 from repro.core import make_policy
 from repro.core.decode import DecodePoolSpec, DecodeSpec
 from repro.core.kvstore import KVStoreSpec, TierSpec
+from repro.core.router import AdmissionSpec, RouterSpec
 from repro.core.stages import ChunkSpec
 from repro.simcluster.hw import A100, Gb, HW
 from repro.simcluster.papermodels import PAPER_MODELS
@@ -109,6 +122,23 @@ KV_HW = HW("a100-50g", flops=A100.flops, hbm_bw=A100.hbm_bw,
 #: remote capacity ~55% of the trace's unique-chain working set (~113 GB),
 #: so eviction is live and hit rates are capacity-bounded
 KV_REMOTE_CAP = 64e9
+
+# ---- router arm: placement policy x scheduler under an overload burst ---
+#: the 8-unit paper cluster, multi-tenant SLO mix, and an MMPP process
+#: spending 20% of the time in an 8x burst — the regime where placement
+#: and admission decide attainment
+ROUTER_POLICIES = ("kv_affinity", "least_backlog", "round_robin",
+                   "session_affinity")
+ROUTER_SCHEDS = ("mfs", "edf", "fs")
+ROUTER_RATES = (72.0, 96.0)
+N_ROUTER = 800
+ROUTER_BURST = ArrivalSpec(process="mmpp", burst_factor=8.0, burst_frac=0.2,
+                           dwell=3.0)
+#: queue-depth admission: trip once the cluster queues a burst's worth of
+#: requests, recover when they drain; sheds loose-class traffic only
+ROUTER_ADMISSION = AdmissionSpec(detector="queue_depth",
+                                 detector_kw=dict(high=12, low=3))
+
 
 # ---- chunked-prefill arm: Sarathi chunks on the Mooncake tail -----------
 #: same 16-unit sp cluster / 50 Gbps NIC share as the KV-reuse sweep (the
@@ -361,8 +391,106 @@ def _run_chunked(rows: List[str], quick: bool = False) -> Dict:
     return chd
 
 
-def main(quick: bool = False):
+def _spec_router(rspec: Optional[RouterSpec]) -> ClusterSpec:
+    kw = dict(SPEC)
+    model = PAPER_MODELS[kw.pop("model")]
+    return ClusterSpec(model=model, par=ParallelismSpec(mode="ep", ep=4),
+                       router=rspec, **kw)
+
+
+def _run_router(rows: List[str], quick: bool = False) -> Dict:
+    """Router arm: placement matrix + admission on/off under the burst.
+
+    The matrix runs every placement policy under {mfs, edf, fs} at both
+    burst rates (all-arrivals attainment; the ``kv_affinity`` default is
+    the extracted historical rule, so its numbers are the legacy router's).
+    The admission half reruns the top rate, shed-nothing vs. the
+    queue-depth controller: a shed request counts as a miss in
+    all-arrivals attainment, so the controller only wins by actually
+    protecting the admitted traffic — ``admitted_attainment`` must improve
+    for every scheduler."""
+    n = 300 if quick else N_ROUTER
+    rd = {"spec": SPEC, "workload": WORKLOAD, "n_requests": n,
+          "rates": list(ROUTER_RATES), "slo_mix": SLO_MIX,
+          "arrival": {"process": ROUTER_BURST.process,
+                      "burst_factor": ROUTER_BURST.burst_factor,
+                      "burst_frac": ROUTER_BURST.burst_frac,
+                      "dwell": ROUTER_BURST.dwell},
+          "admission_spec": {"detector": ROUTER_ADMISSION.detector,
+                             "detector_kw": dict(ROUTER_ADMISSION.detector_kw),
+                             "shed_classes":
+                                 list(ROUTER_ADMISSION.shed_classes)},
+          "matrix": {r: {p: [] for p in ROUTER_SCHEDS}
+                     for r in ROUTER_POLICIES},
+          "admission": {}}
+    traces = {rate: generate_trace(WORKLOADS[WORKLOAD], n, rps=rate, seed=0,
+                                   warmup=WARMUP, arrival=ROUTER_BURST,
+                                   slo_mix=SLO_MIX)
+              for rate in ROUTER_RATES}
+    for rate in ROUTER_RATES:
+        for router in ROUTER_POLICIES:
+            for pol in ROUTER_SCHEDS:
+                sim = ClusterSim(_spec_router(RouterSpec(policy=router)),
+                                 make_policy(pol))
+                t0 = time.time()
+                s = sim.run(traces[rate]).summary()
+                rd["matrix"][router][pol].append(s["slo_attainment"])
+                assert len(sim.runtime.flows) == 0, "runtime leaked flows"
+                emit(rows, f"largescale.router.{router}.{pol}.rps{rate:g}",
+                     f"{s['slo_attainment']:.4f}",
+                     f"p99={s.get('ttft_p99', float('nan')):.3f}s "
+                     f"wall={time.time() - t0:.0f}s")
+    # MFS vs the stage-agnostic baselines, per router, at the top rate
+    rd["mfs_ratio_at_top"] = {
+        r: {p: rd["matrix"][r]["mfs"][-1] / max(rd["matrix"][r][p][-1], 1e-9)
+            for p in ROUTER_SCHEDS if p != "mfs"}
+        for r in ROUTER_POLICIES}
+    for r in ROUTER_POLICIES:
+        for p, v in sorted(rd["mfs_ratio_at_top"][r].items()):
+            emit(rows, f"largescale.router.{r}.mfs_over_{p}", f"{v:.2f}",
+                 f"TTFT attainment ratio at rps{ROUTER_RATES[-1]:g}")
+    # admission on/off at the top burst rate, default router, per scheduler
+    trace = traces[ROUTER_RATES[-1]]
+    for pol in ROUTER_SCHEDS:
+        base = ClusterSim(_spec_router(RouterSpec()),
+                          make_policy(pol)).run(trace)
+        ctrl = ClusterSim(_spec_router(
+            RouterSpec(admission=ROUTER_ADMISSION)),
+            make_policy(pol)).run(trace)
+        ent = {"shed_nothing": {"slo_attainment": base.slo_attainment(),
+                                "admitted_attainment":
+                                    base.admitted_attainment()},
+               "admission_on": {"slo_attainment": ctrl.slo_attainment(),
+                                "admitted_attainment":
+                                    ctrl.admitted_attainment(),
+                                "by_class": ctrl.slo_attainment_by_class(),
+                                "admitted_by_class":
+                                    ctrl.admitted_attainment_by_class(),
+                                "n_shed": len(ctrl.shed),
+                                "n_deferred": ctrl.n_deferred},
+               "admitted_gain": ctrl.admitted_attainment()
+                                - base.admitted_attainment()}
+        rd["admission"][pol] = ent
+        emit(rows, f"largescale.router.admission.{pol}",
+             f"{base.admitted_attainment():.4f} -> "
+             f"{ctrl.admitted_attainment():.4f}",
+             f"admitted-TTFT attainment, shed-nothing -> admission on "
+             f"(shed={len(ctrl.shed)}) at rps{ROUTER_RATES[-1]:g}")
+    return rd
+
+
+def main(quick: bool = False, only: Optional[str] = None):
     rows: List[str] = []
+    if only == "router":
+        # recompute just the router arm and merge it into the committed
+        # artifact — every legacy section stays byte-for-byte untouched
+        with open(OUT_JSON) as fh:
+            result = json.load(fh)
+        result["router"] = _run_router(rows, quick)
+        with open(OUT_JSON, "w") as fh:
+            json.dump(result, fh, indent=2)
+        emit(rows, "largescale.json", OUT_JSON, "router arm merged")
+        return rows
     n = 300 if quick else N_REQUESTS
     rates = RATES[1:3] if quick else RATES
     result = {"spec": SPEC, "workload": WORKLOAD, "n_requests": n,
@@ -458,9 +586,10 @@ def main(quick: bool = False):
              f"TTFT attainment ratio at rps{dec_rates[-1]:g}, d2d on")
     result["decode"] = dec
 
-    # ---- KV-reuse + chunked-prefill arms (see the section functions) ---
+    # ---- KV-reuse + chunked-prefill + router arms (section functions) ---
     result["kvreuse"] = _run_kvreuse(rows, quick)
     result["chunked"] = _run_chunked(rows, quick)
+    result["router"] = _run_router(rows, quick)
 
     with open(OUT_JSON, "w") as fh:
         json.dump(result, fh, indent=2)
@@ -470,4 +599,6 @@ def main(quick: bool = False):
 
 if __name__ == "__main__":
     import sys
-    main(quick="--quick" in sys.argv)
+    argv = sys.argv[1:]
+    only = argv[argv.index("--only") + 1] if "--only" in argv else None
+    main(quick="--quick" in argv, only=only)

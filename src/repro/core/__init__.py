@@ -14,6 +14,10 @@ Public surface:
                                      D2D KV-migration rebalancing
     KVStore, KVStoreSpec, TierSpec — KV-reuse plane: shared tiered prefix
                                      store, live hits, Stage-WB writebacks
+    RouterPolicy, RouterSpec, make_router — router plane: pluggable
+                                     cluster-level placement policies
+    OverloadDetector, AdmissionSpec — overload-triggered admission control
+                                     (shed/defer loose-SLO requests)
     MsFlowRuntime, RuntimeHost     — shared orchestration runtime (§5)
 """
 from .msflow import Stage, Flow, Coflow, FlowState, new_flow_id
@@ -38,6 +42,12 @@ from .decode import (DecodePoolSpec, DecodeSpec, DecodeSession, DecodePlane,
                      partition_pools)
 from .kvstore import (TierSpec, KVStoreSpec, HitSegment, HitPlan, KVStore,
                       kv_route, chain_keys, content_chain)
+from .router import (RoutingView, RouterPolicy, KVAffinityRouter,
+                     RoundRobinRouter, SessionAffinityRouter,
+                     LeastBacklogRouter, register_router, make_router,
+                     OverloadDetector, QueueDepthDetector, LaxityDebtDetector,
+                     register_detector, make_detector,
+                     RouterSpec, AdmissionSpec, AdmissionController)
 from .runtime import MsFlowRuntime, RuntimeHost, RuntimeView
 
 __all__ = [
@@ -55,5 +65,10 @@ __all__ = [
     "partition_pools",
     "TierSpec", "KVStoreSpec", "HitSegment", "HitPlan", "KVStore",
     "kv_route", "chain_keys", "content_chain",
+    "RoutingView", "RouterPolicy", "KVAffinityRouter", "RoundRobinRouter",
+    "SessionAffinityRouter", "LeastBacklogRouter", "register_router",
+    "make_router", "OverloadDetector", "QueueDepthDetector",
+    "LaxityDebtDetector", "register_detector", "make_detector",
+    "RouterSpec", "AdmissionSpec", "AdmissionController",
     "MsFlowRuntime", "RuntimeHost", "RuntimeView",
 ]

@@ -26,8 +26,9 @@ direction of KV-cache-aware routing over a shared LMCache-style store:
     degenerates to count — eviction cost is exact, not approximate.
     Blocks pinned by an in-flight Stage-1 fetch or writeback are never
     evicted from under the transfer.
-  * **Live hit resolution at route time.** :func:`kv_route` scores units
-    by hit-weighted affinity vs. backlog (the same formula both hosts used
+  * **Live hit resolution at route time.** The router plane's default
+    ``kv_affinity`` policy (``repro.core.router``) scores units by
+    hit-weighted affinity vs. backlog (the same formula both hosts used
     for the static oracle) and then :meth:`KVStore.resolve` builds a
     per-tier, per-owner **block plan** against the store's state *now* —
     the ``StageEmitter`` turns each plan segment into per-layer-group
@@ -47,7 +48,7 @@ direction of KV-cache-aware routing over a shared LMCache-style store:
 
 Control-plane only (numpy + hashlib, no JAX), host-agnostic like the rest
 of ``repro.core``: ``ClusterSim`` and ``DisaggServer`` attach one store to
-the shared runtime and route through the same :func:`kv_route`.
+the shared runtime, whose router plane scores and resolves against it.
 """
 from __future__ import annotations
 
@@ -111,6 +112,12 @@ class KVStoreSpec:
     # Zipf victim-unit Stage-1 concentration before demand arrives.
     hot_threshold: int = 0
     hot_copies: int = 2
+    # Exponential half-life (virtual-clock seconds) of the per-block resolve
+    # popularity: a block's count halves every ``hot_halflife`` seconds of
+    # not being resolved, so replication chases *current* popularity instead
+    # of all-time totals (yesterday's hot prefixes cool off). 0 = no decay,
+    # bit-identical to the pre-decay counters.
+    hot_halflife: float = 0.0
 
     def __post_init__(self):
         if not self.tiers or self.tiers[0].scope != "unit":
@@ -227,8 +234,9 @@ class KVStore:
         #: fid -> (keys, tier_idx, loc) for in-flight writebacks
         self._wb: Dict[int, Tuple[Tuple[Hashable, ...], int, int]] = {}
         self._wb_keys: Set[Tuple[Hashable, int, int]] = set()
-        #: per-block resolve popularity driving hot replication
-        self._pop: Dict[Hashable, int] = {}
+        #: per-block resolve popularity driving hot replication, stored as
+        #: (EWMA count, last-update time) so decay is applied lazily
+        self._pop: Dict[Hashable, Tuple[float, float]] = {}
         #: replication target: the first unit-scoped writeback tier (DRAM)
         self._hot_tier: Optional[int] = next(
             (i for i, t in enumerate(spec.tiers)
@@ -316,6 +324,24 @@ class KVStore:
         else:
             self._pins.pop(key, None)
 
+    # ----------------------------------------------------------- popularity
+    def _pop_value(self, key: Hashable, now: float) -> float:
+        """Current (decayed) popularity of a block. With ``hot_halflife``
+        set, the recorded count halves per elapsed half-life since its last
+        update (lazy EWMA — nothing scans the whole table); 0 keeps the
+        raw lifetime count."""
+        ent = self._pop.get(key)
+        if ent is None:
+            return 0.0
+        val, ts = ent
+        hl = self.spec.hot_halflife
+        if hl > 0 and now > ts:
+            val *= 0.5 ** ((now - ts) / hl)
+        return val
+
+    def _bump_pop(self, key: Hashable, now: float) -> None:
+        self._pop[key] = (self._pop_value(key, now) + 1.0, now)
+
     # ------------------------------------------------------------ resolution
     def peek_affinity(self, keys: Sequence[Hashable], max_tokens: int,
                       n_units: int) -> List[int]:
@@ -337,7 +363,7 @@ class KVStore:
         return aff
 
     def resolve(self, keys: Sequence[Hashable], max_tokens: int, unit: int,
-                rid: int) -> HitPlan:
+                rid: int, now: float = 0.0) -> HitPlan:
         """Longest resident chain prefix as a per-tier/per-owner block plan.
 
         Resolution happens against live state *now*: the hit walks leading
@@ -357,7 +383,7 @@ class KVStore:
             pls = self.blocks.get(key)
             if not pls:
                 break
-            self._pop[key] = self._pop.get(key, 0) + 1   # replication signal
+            self._bump_pop(key, now)                     # replication signal
             tl = min(pls, key=lambda t: self._rank(t, unit))
             self._touch(key, tl)
             self._pin(key, rid)
@@ -489,7 +515,7 @@ class KVStore:
         tier = spec.tiers[tier_idx]
         per_unit: Dict[int, List[Hashable]] = {}
         for k in keys:
-            if self._pop.get(k, 0) < spec.hot_threshold:
+            if self._pop_value(k, now) < spec.hot_threshold:
                 continue
             holders = self._units_with_copy(k)
             if src_unit not in holders:
@@ -628,17 +654,22 @@ class KVStore:
 
 # ------------------------------------------------------------ shared routing
 def kv_route(store: KVStore, keys: Sequence[Hashable], max_tokens: int,
-             backlogs: Sequence[float], rid: int) -> Tuple[int, HitPlan]:
-    """Cache-aware routing shared verbatim by both hosts: score every unit
-    by hit-weighted affinity (tokens resident locally along the chain's
-    leading run) against its token backlog — the same 2:1 weighting the
-    static-oracle router used — then resolve the winner's block plan
-    against live store state."""
+             backlogs: Sequence[float], rid: int,
+             now: float = 0.0) -> Tuple[int, HitPlan]:
+    """Cache-aware routing: score every unit by hit-weighted affinity
+    (tokens resident locally along the chain's leading run) against its
+    token backlog — the same 2:1 weighting the static-oracle router used —
+    then resolve the winner's block plan against live store state.
+
+    Kept as a standalone helper for direct store-level callers and tests;
+    the hosts now route through the pluggable router plane
+    (``repro.core.router.KVAffinityRouter`` + the runtime's resolve step),
+    which reproduces this function's store-op sequence exactly."""
     aff = store.peek_affinity(keys, max_tokens, len(backlogs))
     best, best_score = 0, -float("inf")
     for u in range(len(backlogs)):
         score = 2.0 * aff[u] - backlogs[u]
         if score > best_score:
             best, best_score = u, score
-    plan = store.resolve(keys, max_tokens, best, rid)
+    plan = store.resolve(keys, max_tokens, best, rid, now=now)
     return best, plan

@@ -26,12 +26,20 @@ batches on the same queue, and the plane's rebalancer submits Stage-D2D
 KV-migration flows through the same ``_submit`` primitive, contending with
 S1/S2/S3 in the shared fluid net.
 
-Hosts customise the runtime through :class:`RuntimeHost` hooks only:
-routing (KV-aware placement), admission/completion bookkeeping, and — on
-the serving path — launching the *real* JAX prefill when a batch starts.
-The full MFS policy surface (RMLQ promotion, Algorithm 1 RED ordering +
-feasibility pruning, scavenger readmission) runs identically on both
-hosts; there are no degenerate per-host stubs.
+Request placement is a runtime concern, not a host concern: every arrival
+runs the pluggable **router plane** (``repro.core.router``) — the
+configured :class:`~repro.core.router.RouterPolicy` picks the prefill
+unit through a :class:`~repro.core.router.RoutingView`, the KV-reuse hit
+resolves against the live store for the chosen unit, and an optional
+:class:`~repro.core.router.AdmissionController` may shed or defer
+loose-SLO requests while its overload detector is tripped. Hosts
+customise the runtime through :class:`RuntimeHost` hooks only — supplying
+state the router reads (``prepare_route`` fills the legacy reuse oracle,
+``kv_chain_keys`` exposes store keys), admission/completion bookkeeping,
+and — on the serving path — launching the *real* JAX prefill when a batch
+starts. The full MFS policy surface (RMLQ promotion, Algorithm 1 RED
+ordering + feasibility pruning, scavenger readmission) runs identically
+on both hosts; there are no degenerate per-host stubs.
 """
 from __future__ import annotations
 
@@ -45,6 +53,8 @@ from .arbiter import MFSScheduler
 from .feasibility import BatchLoad, inter_request_schedule
 from .msflow import Coflow, Flow, FlowState, Stage
 from .policies import Policy
+from .router import (AdmissionController, KVAffinityRouter, RouterPolicy,
+                     RoutingView)
 from .stages import (BatchState, ChunkPlan, PrefillItem, StageEmitter,
                      StageProfile)
 
@@ -52,17 +62,34 @@ __all__ = ["RuntimeHost", "MsFlowRuntime", "RuntimeView"]
 
 
 class RuntimeHost:
-    """Hooks a host implements around the shared runtime (all optional but
-    :meth:`route`). The runtime never reaches into host state directly."""
+    """Hooks a host implements around the shared runtime (all optional).
+    The runtime never reaches into host state directly — and since the
+    router plane, hosts no longer place requests: the runtime calls the
+    configured :class:`~repro.core.router.RouterPolicy`; hosts only supply
+    the state it reads."""
 
-    def route(self, item: PrefillItem) -> int:
-        """Pick the prefill unit for an arriving request (KV-aware). May
-        refine ``item.reuse`` / ``item.owner_unit`` (e.g. from a real
-        prefix index) before the runtime derives the SLO deadline."""
-        raise NotImplementedError
+    def prepare_route(self, item: PrefillItem) -> None:
+        """Called once per arrival BEFORE the router places the request.
+        Hosts refresh whatever placement state lives on the item here —
+        the serving path matches its prefix index and fills the legacy
+        ``(reuse, owner_unit)`` oracle (``owner_unit = -1`` when no owner
+        exists); the simulator's trace items arrive pre-filled. With a KV
+        store attached the oracle is ignored: the runtime resolves the hit
+        against live store state after placement."""
 
     def on_admitted(self, item: PrefillItem) -> None:
         """Called once per request after routing + deadline derivation."""
+
+    def on_shed(self, item: PrefillItem) -> None:
+        """Called when admission control rejects the request (overload +
+        sheddable SLO class). The request never enters a queue, holds no
+        store pins and no decode slots; hosts record the outcome (an SLO
+        miss against all-arrivals attainment)."""
+
+    def on_deferred(self, item: PrefillItem) -> None:
+        """Called each time admission control delays the request; it will
+        re-arrive after the configured delay on its ORIGINAL arrival clock
+        (deadline unchanged — the SLO budget keeps burning)."""
 
     def on_batch_started(self, bs: BatchState) -> None:
         """Called when a batch forms — the serving host runs the real JAX
@@ -161,7 +188,9 @@ class MsFlowRuntime:
                  slo_mode: str = "per-request", tick_interval: float = 2e-3,
                  drop_budget: int = 32, contention_free: bool = False,
                  trace_stages: bool = False, stage_log_limit: int = 100_000,
-                 decode=None, kvstore=None):
+                 decode=None, kvstore=None,
+                 router: Optional[RouterPolicy] = None,
+                 admission: Optional[AdmissionController] = None):
         self.topo = topo
         self.net = net
         self.evq = evq
@@ -193,6 +222,16 @@ class MsFlowRuntime:
         #: so there is exactly one source of truth.
         self.chunk_tokens = getattr(emitter, "chunk_tokens", 0)
         self.view = RuntimeView(self)
+        #: router plane — the runtime owns placement; the default policy is
+        #: the extracted historical rule (hit-weighted affinity vs backlog),
+        #: bit-identical to the pre-plane per-host loops
+        self.router = router if router is not None else KVAffinityRouter()
+        #: optional admission-control stage (None = admit everything, the
+        #: legacy behaviour)
+        self.admission = admission
+        self.routing_view = RoutingView(self)
+        self.n_shed = 0
+        self.n_deferred = 0
 
         # --- per-unit serving state ---
         self.queues: List[Deque[PrefillItem]] = [deque() for _ in range(n_units)]
@@ -414,8 +453,23 @@ class MsFlowRuntime:
 
     # --------------------------------------------------------- event handlers
     def _on_arrival(self, item: PrefillItem) -> None:
-        u = self.host.route(item)           # may refine reuse / owner_unit /
-        item.unit = u                       # decode pool
+        # Router plane: the host refreshes placement state (prefix-index
+        # match / legacy reuse oracle), the configured policy places, and —
+        # with a KV store attached — the winner's hit resolves against live
+        # store state (pins + LRU touches happen for the chosen unit ONLY,
+        # exactly the old kv_route order: read-only peek, then one resolve).
+        self.host.prepare_route(item)
+        u = self.router.place(item, self.routing_view)
+        if self.kvstore is not None:
+            keys = self.host.kv_chain_keys(item)
+            plan = self.kvstore.resolve(keys, max(0, item.n_tokens - 1), u,
+                                        item.rid, now=self.net.now)
+            item.reuse = plan.tokens
+            item.hit_plan = plan
+            item.owner_unit = u
+        if item.owner_unit < 0:
+            item.owner_unit = u             # no-owner sentinel: self-owned
+        item.unit = u
         if self.decode is not None and not item.pool:
             item.pool = self.decode.pick_pool(item)
         item.ideal_ttft = self.profile.ideal_ttft(item)
@@ -432,6 +486,26 @@ class MsFlowRuntime:
             item.deadline = item.arrival + scale * self._slo_base
         else:
             item.deadline = item.arrival + scale * item.ideal_ttft
+        # Admission stage: while the overload detector is tripped, sheddable
+        # requests are rejected or delayed BEFORE they hold any resources —
+        # the resolve above pinned store blocks for the hit, so both paths
+        # must release them (re-resolved on a deferred retry).
+        if self.admission is not None:
+            verdict = self.admission.decide(item, self.routing_view, u)
+            if verdict != "admit":
+                if self.kvstore is not None:
+                    self.kvstore.release(item.rid)
+                    item.reuse, item.hit_plan = 0, None
+                if verdict == "defer":
+                    item.deferrals += 1
+                    self.n_deferred += 1
+                    self.host.on_deferred(item)
+                    self.evq.push(self.net.now + self.admission.spec.defer_delay,
+                                  "arr", item)
+                else:
+                    self.n_shed += 1
+                    self.host.on_shed(item)
+                return
         self.queues[u].append(item)
         self.backlog_tokens[u] += item.n_tokens
         self.host.on_admitted(item)

@@ -198,11 +198,14 @@ class PrefillItem:
     hit_plan: Any = None
     slo_scale: float = 0.0             # per-request SLO class scale (0 = use
     #                                    the pool default, then cluster-wide)
+    slo_class: str = "standard"        # SLO class label (admission control
+    #                                    sheds/defers only the sheddable ones)
     pool: str = ""                     # decode pool ("" = host/plane picks)
     out_tokens: int = 0                # output length (0 = decode plane samples)
     payload: Any = None
     # --- filled by the runtime ---
     unit: int = -1
+    deferrals: int = 0                 # admission-control defer retries so far
     deadline: float = 0.0
     ideal_ttft: float = 0.0
     stalls: float = 0.0

@@ -41,7 +41,6 @@ delivered, exactly as the simulator charges it.
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
 
@@ -52,7 +51,8 @@ import numpy as np
 from ..core import MFSScheduler, Policy
 from ..core.decode import (DecodePlane, DecodeSession, DecodeSpec,
                            partition_pools)
-from ..core.kvstore import KVStore, KVStoreSpec, content_chain, kv_route
+from ..core.kvstore import KVStore, KVStoreSpec, content_chain
+from ..core.router import AdmissionSpec, RouterSpec
 from ..core.runtime import MsFlowRuntime, RuntimeHost
 from ..core.stages import (BatchState, ChunkSpec, GroupPlan, ParallelismSpec,
                            PrefillItem, StageEmitter, StageProfile)
@@ -72,6 +72,8 @@ class ServeRequest:
     arrival: float
     tokens: np.ndarray
     max_new: int = 8
+    slo_class: str = "standard"     # tight | standard | loose (admission
+    #                                 control sheds only the sheddable ones)
     extra: Optional[Dict[str, Any]] = None     # e.g. src_embeds for enc-dec
 
 
@@ -86,6 +88,8 @@ class ServeResult:
     reused_tokens: int = 0
     unit: int = -1
     pruned: bool = False
+    shed: bool = False              # rejected by admission control: never
+    #                                 prefilled, no first token, SLO missed
     # --- decode plane (modeled clock; real tokens come from DecodeBatch) ---
     pool: str = ""
     tpot: float = 0.0               # mean modeled time per output token
@@ -120,6 +124,9 @@ class DisaggConfig:
     # prefix caches in chunk slices (PagedStore.gather_slice) instead of
     # one monolithic gather. None (or chunk_tokens=0) = legacy schedule.
     chunk: Optional[ChunkSpec] = None
+    # router + admission plane (None = the default ``kv_affinity`` policy
+    # with admission off — the historical placement, bit-identical).
+    router: Optional[RouterSpec] = None
 
     def chunk_tokens(self) -> int:
         return self.chunk.chunk_tokens if self.chunk is not None else 0
@@ -191,13 +198,16 @@ class DisaggServer(RuntimeHost):
                                decode_eps=decode_eps, topo=self.topo,
                                pool_eps=pool_eps,
                                chunk_tokens=cfg.chunk_tokens())
+        rspec = cfg.router
         self.runtime = MsFlowRuntime(
             self.topo, FluidNet(self.topo), EventQueue(), self.policy,
             self.profile, emitter, host=self, n_units=cfg.n_prefill_units,
             max_batch_tokens=cfg.max_batch_tokens, slo_scale=cfg.slo_scale,
             slo_mode="per-request", tick_interval=cfg.tick_interval,
             drop_budget=cfg.drop_budget, decode=self.decode_plane,
-            kvstore=self.kvstore)
+            kvstore=self.kvstore,
+            router=rspec.build() if rspec is not None else None,
+            admission=rspec.build_admission() if rspec is not None else None)
 
         self.engines = [ServingEngine(model, params)
                         for _ in range(cfg.n_prefill_units)]
@@ -218,28 +228,23 @@ class DisaggServer(RuntimeHost):
                    for l in range(m.n_layers))
 
     # ------------------------------------------------------------ host hooks
-    def route(self, item: PrefillItem) -> int:
-        """KV-aware routing: prefix affinity vs. per-unit token backlog.
+    def prepare_route(self, item: PrefillItem) -> None:
+        """Refresh placement state before the runtime's router places.
 
-        With the KV-reuse plane attached, the hit (length, sources, tiers)
-        resolves against the live shared store at route time via the same
-        :func:`repro.core.kvstore.kv_route` the simulator uses; the
-        PrefixIndex entry is kept only as the data-plane capability that
-        materialises real pages for the modeled hit.
+        Matches the content-addressed PrefixIndex and fills the legacy
+        ``(reuse, owner_unit)`` oracle the ``kv_affinity`` policy scores
+        (``owner_unit = -1`` when no entry owns the prefix — the runtime
+        self-assigns after placement). With the KV-reuse plane attached the
+        oracle is ignored — the hit (length, sources, tiers) resolves
+        against the live shared store after placement — and the PrefixIndex
+        entry is kept only as the data-plane capability that materialises
+        real pages for the modeled hit.
         """
         job: _ServeJob = item.payload
         entry = self.index.match(job.req.tokens)
         if self.kvstore is not None:
-            keys = content_chain(job.req.tokens,
-                                 self.kvstore.spec.block_tokens)
-            unit, plan = kv_route(self.kvstore, keys,
-                                  len(job.req.tokens) - 1,
-                                  self.runtime.backlog_tokens, item.rid)
             job.entry = entry
-            item.reuse = plan.tokens
-            item.hit_plan = plan
-            item.owner_unit = unit
-            return unit
+            return
         reuse = entry.n_tokens if entry else 0
         if reuse >= len(job.req.tokens):    # guarantee >=1 suffix token
             reuse, entry = 0, None
@@ -247,22 +252,24 @@ class DisaggServer(RuntimeHost):
         item.reuse = reuse
         # decode pool: left empty here, so the runtime fills it via
         # DecodePlane.pick_pool after routing (set item.pool to override)
-        owner = entry.owner_unit if entry else None
-        best, best_score = 0, -math.inf
-        for u in range(self.cfg.n_prefill_units):
-            aff = reuse if u == owner else 0
-            score = 2.0 * aff - self.runtime.backlog_tokens[u]
-            if score > best_score:
-                best, best_score = u, score
-        item.owner_unit = owner if owner is not None else best
-        return best
+        item.owner_unit = entry.owner_unit if entry else -1
 
     def kv_chain_keys(self, item: PrefillItem):
-        # store-aware SLO calibration: the same keys route() resolves
+        # the keys the router plane scores and the runtime resolves, also
+        # used by store-aware SLO calibration
         if self.kvstore is None:
             return ()
         job: _ServeJob = item.payload
         return content_chain(job.req.tokens, self.kvstore.spec.block_tokens)
+
+    def on_shed(self, item: PrefillItem) -> None:
+        # rejected before any prefill ran: record a result so callers see
+        # the outcome (no first token, SLO counted as missed)
+        job: _ServeJob = item.payload
+        r = job.req
+        self.results[r.rid] = ServeResult(
+            rid=r.rid, ttft=float("inf"), deadline=item.deadline,
+            met_slo=False, first_token=-1, tokens=[], shed=True)
 
     def on_batch_started(self, bs: BatchState) -> None:
         # REAL compute (results are exact; the virtual clock runs on the
@@ -354,7 +361,8 @@ class DisaggServer(RuntimeHost):
         for r in sorted(requests, key=lambda x: x.arrival):
             self.runtime.push_arrival(PrefillItem(
                 rid=r.rid, arrival=r.arrival, n_tokens=len(r.tokens),
-                out_tokens=r.max_new, payload=_ServeJob(req=r)))
+                slo_class=r.slo_class, out_tokens=r.max_new,
+                payload=_ServeJob(req=r)))
         self.runtime.run()
         # all prefills finished: run the decode continuation (real tokens)
         for _ in range(decode_steps):

@@ -1,6 +1,11 @@
 """Serving metrics — TTFT, SLO attainment, CCT, earliness (§6.1), plus the
 decode plane's TPOT/TBT attainment per pool and per SLO class.
 
+With admission control active (router plane), attainment is reported two
+ways: ``slo_attainment`` counts every arrival (a shed request is a miss —
+rejecting hard requests cannot inflate it) while ``admitted_attainment``
+covers served requests only; both exist overall and per SLO class.
+
 SLO definition follows the paper: threshold = ``slo_scale`` (default 3x) times
 the TTFT measured under low-load (contention-free) conditions for the same
 request — computed analytically per request by the simulator's ideal path.
@@ -59,12 +64,33 @@ class SimMetrics:
     kv_prompt_tokens: Dict[int, int] = field(default_factory=dict)
     kv_tier_tokens: Dict[str, int] = field(default_factory=dict)
     kvstore_stats: Dict[str, float] = field(default_factory=dict)
+    # --- router/admission plane (empty when admission control is off) ---
+    shed: Dict[int, str] = field(default_factory=dict)   # rid -> slo_class
+    n_deferred: int = 0                                  # defer retries total
 
     # ------------------------------------------------------------- summaries
     def _rids(self):
         return [r for r in self.ttft if r >= 0]      # exclude warm-up
 
+    def _shed_rids(self, slo_class: Optional[str] = None):
+        return [r for r, c in self.shed.items()
+                if r >= 0 and (slo_class is None or c == slo_class)]
+
     def slo_attainment(self) -> float:
+        """All-arrivals TTFT attainment: a shed request never got a first
+        token, so it counts as a miss in the denominator — admission
+        control cannot inflate this number by rejecting hard requests."""
+        rids = self._rids()
+        n_shed = len(self._shed_rids())
+        if not rids and not n_shed:
+            return float("nan")
+        ok = sum(1 for r in rids if self.ttft[r] <= self.deadline[r] + 1e-9)
+        return ok / (len(rids) + n_shed)
+
+    def admitted_attainment(self) -> float:
+        """TTFT attainment over admitted (served) requests only — what the
+        accepted traffic experienced. With admission off this equals
+        :meth:`slo_attainment`."""
         rids = self._rids()
         if not rids:
             return float("nan")
@@ -150,6 +176,22 @@ class SimMetrics:
         return {c: self.tpot_attainment(slo_class=c) for c in classes}
 
     def slo_attainment_by_class(self) -> Dict[str, float]:
+        """All-arrivals attainment per SLO class (shed counts as a miss
+        against its class)."""
+        by: Dict[str, List[int]] = {}
+        for r in self._rids():
+            by.setdefault(self.slo_class.get(r, "standard"), []).append(r)
+        shed_by: Dict[str, int] = {}
+        for r in self._shed_rids():
+            shed_by[self.shed[r]] = shed_by.get(self.shed[r], 0) + 1
+        classes = sorted(set(by) | set(shed_by))
+        return {c: sum(1 for r in by.get(c, ())
+                       if self.ttft[r] <= self.deadline[r] + 1e-9)
+                / (len(by.get(c, ())) + shed_by.get(c, 0))
+                for c in classes}
+
+    def admitted_attainment_by_class(self) -> Dict[str, float]:
+        """Admitted-only attainment per SLO class."""
         by: Dict[str, List[int]] = {}
         for r in self._rids():
             by.setdefault(self.slo_class.get(r, "standard"), []).append(r)
@@ -199,4 +241,10 @@ class SimMetrics:
             s["kv_hit_rate"] = self.kv_hit_rate()
             s["kv_tier_mix"] = self.kv_tier_mix()
             s.update({f"kv_{k}": v for k, v in self.kvstore_stats.items()})
+        if self.shed or self.n_deferred:   # admission control acted
+            s["n_shed"] = len(self._shed_rids())
+            s["n_deferred"] = self.n_deferred
+            s["admitted_attainment"] = self.admitted_attainment()
+            s["attainment_by_class"] = self.slo_attainment_by_class()
+            s["admitted_by_class"] = self.admitted_attainment_by_class()
         return s

@@ -34,7 +34,8 @@ from ..configs.base import ArchConfig
 from ..core import Coflow, Policy
 from ..core.decode import (DecodePlane, DecodeSession, DecodeSpec,
                            partition_pools)
-from ..core.kvstore import KVStore, KVStoreSpec, chain_keys, kv_route
+from ..core.kvstore import KVStore, KVStoreSpec, chain_keys
+from ..core.router import AdmissionSpec, RouterSpec
 from ..core.runtime import MsFlowRuntime, RuntimeHost
 from ..core.stages import (BatchState, ChunkSpec, GroupPlan, ParallelismSpec,
                            PrefillItem, StageEmitter, StageProfile)
@@ -44,7 +45,7 @@ from .metrics import CoflowRecord, SimMetrics
 from .trace import Request
 
 __all__ = ["ParallelismSpec", "ClusterSpec", "ClusterSim", "ChunkSpec",
-           "DecodeSpec", "KVStoreSpec"]
+           "DecodeSpec", "KVStoreSpec", "RouterSpec", "AdmissionSpec"]
 
 
 @dataclass
@@ -81,6 +82,11 @@ class ClusterSpec:
     # per chunk (chunk-c P2D overlaps chunk-c+1 compute; RLI tightens to
     # remaining-chunk compute). ``ChunkSpec(chunk_tokens=0)`` is also legacy.
     chunk: Optional[ChunkSpec] = None
+    # router + admission plane (None = the default ``kv_affinity`` policy
+    # with admission off, which reproduces the historical placement
+    # bit-for-bit). A spec picks the placement policy from the router
+    # registry and may attach overload-triggered admission control.
+    router: Optional[RouterSpec] = None
 
     def chunk_tokens(self) -> int:
         return self.chunk.chunk_tokens if self.chunk is not None else 0
@@ -148,13 +154,16 @@ class ClusterSim(RuntimeHost):
         emitter = StageEmitter(self.profile, unit_eps, decode_eps, self.topo,
                                pool_eps=pool_eps,
                                chunk_tokens=spec.chunk_tokens())
+        rspec = spec.router
         self.runtime = MsFlowRuntime(
             self.topo, FluidNet(self.topo), EventQueue(), policy,
             self.profile, emitter, host=self, n_units=spec.n_units,
             max_batch_tokens=spec.max_batch_tokens, slo_scale=spec.slo_scale,
             slo_mode=spec.slo_mode, tick_interval=spec.tick_interval,
             drop_budget=spec.drop_budget, contention_free=contention_free,
-            decode=self.decode_plane, kvstore=self.kvstore)
+            decode=self.decode_plane, kvstore=self.kvstore,
+            router=rspec.build() if rspec is not None else None,
+            admission=rspec.build_admission() if rspec is not None else None)
         self.metrics = SimMetrics(policy=policy.name)
 
     # kept as properties so tooling (and tests) can poke at the shared state
@@ -167,38 +176,26 @@ class ClusterSim(RuntimeHost):
         return self.runtime.view
 
     # ------------------------------------------------------------ host hooks
-    def route(self, item: PrefillItem) -> int:
-        # pool selection rides on routing: the runtime fills ``item.pool``
-        # via ``DecodePlane.pick_pool`` right after this hook returns (class
-        # pinning, then weighted rid hash); a host that wants custom
-        # placement just sets ``item.pool`` here and the runtime keeps it
-        if self.kvstore is not None:
-            # KV-reuse plane: resolve the hit against live store state NOW
-            # and route by hit-weighted affinity vs. backlog — the static
-            # prefix_id%n_units owner oracle is gone on this path
-            r: Request = item.payload
-            keys = chain_keys(r.prefix_chain,
-                              self.kvstore.spec.block_tokens)
-            unit, plan = kv_route(self.kvstore, keys, item.n_tokens - 1,
-                                  self.runtime.backlog_tokens, item.rid)
-            item.reuse = plan.tokens
-            item.hit_plan = plan
-            item.owner_unit = unit
-            return unit
-        owner = item.owner_unit
-        best, best_score = 0, -math.inf
-        for u in range(self.spec.n_units):
-            aff = item.reuse if u == owner else 0
-            score = 2.0 * aff - self.runtime.backlog_tokens[u]
-            if score > best_score:
-                best, best_score = u, score
-        return best
+    # Placement lives in the runtime's router plane now: trace items arrive
+    # with the legacy (reuse, owner_unit) oracle pre-filled, so the default
+    # no-op ``prepare_route`` suffices — the ``kv_affinity`` policy reads
+    # the oracle (store off) or live store residency (store on), and the
+    # runtime resolves the winner's block plan. Pool selection still rides
+    # on routing: the runtime fills ``item.pool`` via
+    # ``DecodePlane.pick_pool`` right after placement.
 
     def kv_chain_keys(self, item: PrefillItem):
-        # store-aware SLO calibration: the same keys route() resolves
+        # the keys the router plane scores and the runtime resolves, also
+        # used by store-aware SLO calibration
         r: Request = item.payload
         return chain_keys(r.prefix_chain, self.kvstore.spec.block_tokens) \
             if self.kvstore is not None else ()
+
+    def on_shed(self, item: PrefillItem) -> None:
+        # shed requests never ran: no TTFT, but they count as SLO misses in
+        # all-arrivals attainment (SimMetrics.slo_attainment)
+        r: Request = item.payload
+        self.metrics.shed[r.rid] = r.slo_class
 
     def on_admitted(self, item: PrefillItem) -> None:
         r: Request = item.payload
@@ -260,12 +257,14 @@ class ClusterSim(RuntimeHost):
                 reuse=r.reuse_len,
                 owner_unit=r.prefix_id % self.spec.n_units,
                 slo_scale=getattr(r, "slo_scale", 0.0),
+                slo_class=getattr(r, "slo_class", "standard"),
                 out_tokens=getattr(r, "out_len", 0), payload=r))
         self.runtime.calibrate_slo(items)
         for it in items:
             self.runtime.push_arrival(it)
         self.runtime.run(max_events=max_events)
         self.metrics.pruned = self.runtime.n_pruned
+        self.metrics.n_deferred = self.runtime.n_deferred
         if self.decode_plane is not None:
             self.metrics.decode_stats = self.decode_plane.summary()
         if self.kvstore is not None:

@@ -443,6 +443,56 @@ def test_hot_replication_bounded_by_hot_copies():
     assert store.stats["hot_push_flows"] == before
 
 
+def test_hot_counter_ewma_decay_halves_per_halflife():
+    """With ``hot_halflife`` set, a block's popularity counter is an EWMA:
+    one half-life after the last touch its value has halved, so stale hits
+    stop counting toward the hot threshold."""
+    store = _store(hot_halflife=4.0)
+    store._bump_pop("k", 0.0)
+    store._bump_pop("k", 0.0)
+    assert store._pop_value("k", 0.0) == pytest.approx(2.0)
+    assert store._pop_value("k", 4.0) == pytest.approx(1.0)   # one half-life
+    assert store._pop_value("k", 12.0) == pytest.approx(0.25)
+    # a fresh bump folds the decayed value in, then restarts the clock
+    store._bump_pop("k", 4.0)
+    assert store._pop_value("k", 4.0) == pytest.approx(2.0)
+    assert store._pop_value("k", 8.0) == pytest.approx(1.0)
+    assert store._pop_value("missing", 1.0) == 0.0
+
+
+def test_hot_counter_legacy_raw_counts_at_zero_halflife():
+    """``hot_halflife=0`` (the default) keeps the legacy raw counts:
+    popularity never decays, bit-identical to pre-EWMA stores."""
+    store = _store()                       # default hot_halflife=0.0
+    store._bump_pop("k", 0.0)
+    store._bump_pop("k", 1.0)
+    assert store._pop_value("k", 10_000.0) == pytest.approx(2.0)
+
+
+def test_ewma_decay_gates_hot_replication():
+    """The same two-touch heat that trips replication with raw counts must
+    NOT trip it when a long gap decayed the counter below threshold."""
+    def drive(hot_halflife, gap):
+        store = KVStore(
+            KVStoreSpec(block_tokens=BT, hot_threshold=2, hot_copies=2,
+                        hot_halflife=hot_halflife, tiers=(
+                            TierSpec("hbm", capacity=64 * BB),
+                            TierSpec("dram", capacity=64 * BB, fetch_bw=4.0,
+                                     writeback=True))),
+            bytes_per_token=1.0, unit_eps=[[0], [1], [2]], nic_bw=8.0)
+        keys = chain_keys(((0, 2 * BT),), BT)
+        _admit(store, 0, 0, keys)                  # cold admission
+        store.resolve(keys, 10 ** 9, 0, 1, now=0.0)   # heat: pop -> 1
+        store.release(1)
+        store.resolve(keys, 10 ** 9, 0, 2, now=0.0)   # heat: pop -> 2
+        store.release(2)
+        _admit(store, 3, 0, keys, now=gap)         # admit after the gap
+        return store.stats["hot_push_flows"]
+
+    assert drive(hot_halflife=0.0, gap=100.0) > 0     # raw counts: still hot
+    assert drive(hot_halflife=1.0, gap=100.0) == 0    # decayed: cold again
+
+
 # ---------------------------------------------- store-aware SLO calibration
 def test_steady_state_reuse_replay():
     store = _store(hbm_blocks=4096, remote_blocks=4096)

@@ -1,0 +1,452 @@
+"""Router + admission-control plane: registry resolution, per-policy
+placement semantics, overload-detector hysteresis, admission shedding /
+deferral (store pins and decode slots must be released), bit-identity of
+the default ``kv_affinity`` policy against the historical routing rule
+(store on and off), and sim<->serve routing-decision parity per policy."""
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import make_policy
+from repro.core.kvstore import KVStoreSpec, TierSpec
+from repro.core.router import (AdmissionController, AdmissionSpec,
+                               KVAffinityRouter, LaxityDebtDetector,
+                               LeastBacklogRouter, OverloadDetector,
+                               QueueDepthDetector, RoundRobinRouter,
+                               RouterPolicy, RouterSpec,
+                               SessionAffinityRouter, kv_affinity_score,
+                               make_detector, make_router, register_router,
+                               _ROUTERS)
+from repro.simcluster.papermodels import PAPER_MODELS
+from repro.simcluster.sim import ClusterSim, ClusterSpec, ParallelismSpec
+from repro.simcluster.trace import WORKLOADS, generate_trace
+
+
+# ------------------------------------------------------------- test fixtures
+class _FakeView:
+    """Minimal RoutingView stand-in for policy/detector unit tests."""
+
+    def __init__(self, backlogs=(0.0, 0.0), queued=(), now=0.0,
+                 queued_item_lists=None):
+        self.backlogs = list(backlogs)
+        self._queued = list(queued) or [0] * len(self.backlogs)
+        self.now = now
+        self.kvstore = None
+        self._items = queued_item_lists or [[] for _ in self.backlogs]
+
+    @property
+    def n_units(self):
+        return len(self.backlogs)
+
+    def queued(self, unit):
+        return self._queued[unit]
+
+    def queued_items(self, unit):
+        return iter(self._items[unit])
+
+    def total_queued(self):
+        return sum(self._queued)
+
+    def session_key(self, item):
+        pid = getattr(item.payload, "prefix_id", None)
+        if pid is not None:
+            return ("prefix", int(pid))
+        return ("rid", int(item.rid))
+
+
+def _item(rid=0, n_tokens=100, reuse=0, owner=-1, prefix_id=None,
+          slo_class="standard", deferrals=0):
+    return SimpleNamespace(rid=rid, n_tokens=n_tokens, reuse=reuse,
+                           owner_unit=owner, slo_class=slo_class,
+                           deferrals=deferrals,
+                           payload=SimpleNamespace(prefix_id=prefix_id))
+
+
+def _spec(**kw):
+    kw.setdefault("par", ParallelismSpec(mode="ep", ep=8))
+    kw.setdefault("n_units", 2)
+    return ClusterSpec(model=PAPER_MODELS["mixtral-8x7b"], **kw)
+
+
+def _kv_spec(blocks=256, block_tokens=256):
+    m = PAPER_MODELS["mixtral-8x7b"]
+    bpt = m.kv_bytes_per_token_layer(2, 0) * m.n_layers
+    cap = blocks * block_tokens * bpt
+    return KVStoreSpec(block_tokens=block_tokens, tiers=(
+        TierSpec("hbm", capacity=cap),
+        TierSpec("remote", capacity=8 * cap, fetch_bw=12e9, scope="pooled",
+                 writeback=True)))
+
+
+def _record_placements(sim):
+    """Wrap the runtime's router so every placement decision is recorded
+    as rid -> unit (works for any policy, both hosts)."""
+    placed = {}
+    orig = sim.runtime.router.place
+
+    def place(item, view):
+        u = orig(item, view)
+        placed[item.rid] = u
+        return u
+
+    sim.runtime.router.place = place
+    return placed
+
+
+# ------------------------------------------------------------------ registry
+def test_registry_resolves_all_shipped_policies():
+    for name, cls in (("kv_affinity", KVAffinityRouter),
+                      ("round_robin", RoundRobinRouter),
+                      ("session_affinity", SessionAffinityRouter),
+                      ("least_backlog", LeastBacklogRouter)):
+        r = make_router(name)
+        assert isinstance(r, cls) and r.name == name
+
+
+def test_registry_unknown_names_raise_with_choices():
+    with pytest.raises(KeyError, match="unknown router policy 'nope'"):
+        make_router("nope")
+    with pytest.raises(KeyError, match="kv_affinity"):
+        make_router("nope")          # message lists the registered names
+    with pytest.raises(KeyError, match="unknown overload detector"):
+        make_detector("nope")
+    with pytest.raises(KeyError, match="queue_depth"):
+        make_detector("nope")
+
+
+def test_register_router_extends_the_registry():
+    class PinnedRouter(RouterPolicy):
+        name = "pinned-test"
+
+        def place(self, item, view):
+            return 0
+
+    try:
+        register_router(PinnedRouter)
+        assert isinstance(make_router("pinned-test"), PinnedRouter)
+        m = ClusterSim(_spec(router=RouterSpec(policy="pinned-test")),
+                       make_policy("mfs")).run(
+            generate_trace(WORKLOADS["qwen-conv"], 12, rps=8.0, seed=0))
+        assert m.summary()["n"] == 12
+    finally:
+        _ROUTERS.pop("pinned-test", None)
+
+
+def test_spec_validation_errors():
+    with pytest.raises(ValueError, match="session key"):
+        SessionAffinityRouter(key="user")
+    with pytest.raises(ValueError, match="signal"):
+        QueueDepthDetector(signal="watts")
+    with pytest.raises(ValueError, match="scope"):
+        QueueDepthDetector(scope="rack")
+    with pytest.raises(ValueError, match="low <= high"):
+        QueueDepthDetector(high=4, low=8)
+    with pytest.raises(ValueError, match="admission mode"):
+        AdmissionSpec(mode="drop")
+    assert isinstance(RouterSpec().build(), KVAffinityRouter)
+    assert RouterSpec().build_admission() is None
+
+
+# ---------------------------------------------------- per-policy placement
+def test_round_robin_cycles_and_resets():
+    r = make_router("round_robin")
+    v = _FakeView(backlogs=[0.0, 0.0, 0.0])
+    assert [r.place(_item(rid=i), v) for i in range(7)] \
+        == [0, 1, 2, 0, 1, 2, 0]
+    r.reset()
+    assert r.place(_item(), v) == 0
+
+
+def test_least_backlog_is_argmin_with_lowest_id_tiebreak():
+    r = make_router("least_backlog")
+    assert r.place(_item(), _FakeView(backlogs=[30.0, 10.0, 20.0])) == 1
+    assert r.place(_item(), _FakeView(backlogs=[5.0, 5.0, 5.0])) == 0
+
+
+def test_kv_affinity_weighs_reuse_against_backlog():
+    r = make_router("kv_affinity")
+    # 2:1 weighting: 40 reusable tokens on unit 1 outweigh a 50-token
+    # backlog deficit (80 - 50 > 0 - 0 is false -> strict compare keeps 1)
+    assert r.place(_item(reuse=40, owner=1),
+                   _FakeView(backlogs=[0.0, 50.0])) == 1
+    # ... but not a 100-token one
+    assert r.place(_item(reuse=40, owner=1),
+                   _FakeView(backlogs=[0.0, 100.0])) == 0
+    # no owner (serving-path miss): no unit gets credit -> least backlog
+    assert r.place(_item(reuse=40, owner=-1),
+                   _FakeView(backlogs=[9.0, 2.0])) == 1
+    # exact tie keeps the lowest unit (strict > in the scan)
+    assert r.place(_item(), _FakeView(backlogs=[7.0, 7.0])) == 0
+    assert kv_affinity_score(40, 50.0) == pytest.approx(30.0)
+
+
+def test_session_affinity_is_sticky_and_spreads():
+    r = make_router("session_affinity")
+    v = _FakeView(backlogs=[0.0] * 4)
+    units = [r.place(_item(rid=i), v) for i in range(64)]
+    # same session key -> same unit, across calls and instances
+    assert units == [make_router("session_affinity").place(_item(rid=i), v)
+                     for i in range(64)]
+    assert len(set(units)) >= 3          # rendezvous spreads sessions
+    # backlog-blind: placement ignores load entirely
+    assert r.place(_item(rid=7), _FakeView(backlogs=[1e9, 1e9, 1e9, 1e9])) \
+        == units[7]
+
+
+def test_session_affinity_prefix_key_colocates_lineages():
+    r = make_router("session_affinity", key="prefix")
+    v = _FakeView(backlogs=[0.0] * 4)
+    a = [r.place(_item(rid=i, prefix_id=11), v) for i in range(8)]
+    assert len(set(a)) == 1              # one lineage -> one unit
+    b = {r.place(_item(rid=i, prefix_id=i), v) for i in range(32)}
+    assert len(b) >= 3                   # distinct lineages spread
+
+
+# ------------------------------------------------------- overload detectors
+def test_queue_depth_detector_hysteresis_trip_and_recover():
+    d = QueueDepthDetector(high=10, low=4)
+    seq = [3, 9, 10, 7, 5, 4, 2, 10]
+    got = []
+    for q in seq:
+        got.append(d.update(_FakeView(queued=[q], backlogs=[0.0]), 0))
+    #          3      9      10    7     5     4      2      10
+    assert got == [False, False, True, True, True, False, False, True]
+    assert d.n_trips == 2
+    d.reset()
+    assert not d.tripped and d.n_trips == 0
+
+
+def test_queue_depth_detector_scopes_and_signals():
+    v = _FakeView(backlogs=[100.0, 300.0], queued=[2, 6])
+    assert QueueDepthDetector(signal="requests",
+                              scope="cluster").signal(v, 0) == 8
+    assert QueueDepthDetector(signal="requests",
+                              scope="unit").signal(v, 1) == 6
+    assert QueueDepthDetector(signal="tokens",
+                              scope="cluster").signal(v, 0) == 400.0
+    assert QueueDepthDetector(signal="tokens",
+                              scope="unit").signal(v, 0) == 100.0
+
+
+def test_laxity_debt_detector_sums_already_lost_slack():
+    items = [SimpleNamespace(ideal_ttft=1.0, deadline=10.5),   # 0.5 late
+             SimpleNamespace(ideal_ttft=0.2, deadline=12.0),   # feasible
+             SimpleNamespace(ideal_ttft=2.0, deadline=11.0)]   # 1.0 late
+    v = _FakeView(backlogs=[0.0], now=10.0, queued_item_lists=[items])
+    assert LaxityDebtDetector().signal(v, 0) == pytest.approx(1.5)
+    d = LaxityDebtDetector(high=1.0, low=0.1)
+    assert d.update(v, 0) is True        # 1.5 >= high
+    v2 = _FakeView(backlogs=[0.0], now=10.0, queued_item_lists=[[]])
+    assert d.update(v2, 0) is False      # queue drained -> recovered
+
+
+def test_admission_controller_defer_then_shed():
+    ctl = AdmissionController(AdmissionSpec(
+        detector="queue_depth", detector_kw=dict(high=0.0, low=-1.0),
+        mode="defer", max_defers=2))
+    v = _FakeView(queued=[0], backlogs=[0.0])      # always tripped (v >= 0)
+    assert ctl.decide(_item(slo_class="tight"), v, 0) == "admit"
+    assert ctl.decide(_item(slo_class="standard"), v, 0) == "admit"
+    it = _item(slo_class="loose")
+    assert ctl.decide(it, v, 0) == "defer"
+    it.deferrals = 2                               # retry budget exhausted
+    assert ctl.decide(it, v, 0) == "shed"
+    assert ctl.n_deferred == 1 and ctl.n_shed == 1
+
+
+# ----------------------------------- bit-identity vs. the historical rule
+def _legacy_oracle_check(sim):
+    """Assert every placement equals a verbatim copy of the pre-plane
+    routing loop (2:1 hit-weighted affinity vs. token backlog, strict >,
+    ascending scan) evaluated on the same view. Returns a counter."""
+    orig = sim.runtime.router.place
+    checked = [0]
+
+    def place(item, view):
+        if view.kvstore is not None:
+            aff = view.kvstore.peek_affinity(
+                view.chain_keys(item), max(0, item.n_tokens - 1),
+                view.n_units)
+        else:
+            aff = [item.reuse if u == item.owner_unit else 0
+                   for u in range(view.n_units)]
+        best, best_score = 0, -float("inf")
+        for u in range(view.n_units):
+            score = 2.0 * aff[u] - view.backlogs[u]
+            if score > best_score:
+                best, best_score = u, score
+        got = orig(item, view)
+        assert got == best, (item.rid, got, best)
+        checked[0] += 1
+        return got
+
+    sim.runtime.router.place = place
+    return checked
+
+
+@pytest.mark.parametrize("store", [False, True])
+def test_default_router_matches_legacy_rule(store):
+    trace = generate_trace(WORKLOADS["qwen-agent"], 40, rps=16.0, seed=3)
+    spec = _spec(kvstore=_kv_spec() if store else None)
+    sim = ClusterSim(spec, make_policy("mfs"))
+    checked = _legacy_oracle_check(sim)
+    m = sim.run(trace)
+    assert checked[0] >= 40 and m.summary()["n"] == 40
+
+
+@pytest.mark.parametrize("store", [False, True])
+def test_explicit_default_spec_is_bit_identical(store):
+    """router=None and an explicit default RouterSpec() must produce
+    byte-identical runs on a fixed seed, store on and off."""
+    kv = _kv_spec() if store else None
+    trace = generate_trace(WORKLOADS["qwen-agent"], 32, rps=12.0, seed=1)
+    runs = []
+    for router in (None, RouterSpec()):
+        sim = ClusterSim(_spec(kvstore=kv, router=router),
+                         make_policy("mfs"))
+        placed = _record_placements(sim)
+        m = sim.run(trace)
+        runs.append((placed, m))
+    (pa, ma), (pb, mb) = runs
+    assert pa == pb and len(pa) >= 32
+    assert ma.ttft == mb.ttft
+    assert ma.summary() == mb.summary()
+    assert "n_shed" not in ma.summary()      # admission off: legacy keys only
+
+
+# ---------------------------------------------------------------- admission
+def _admission_spec(**kw):
+    kw.setdefault("detector", "queue_depth")
+    kw.setdefault("detector_kw", dict(high=0.0, low=-1.0))  # always tripped
+    return AdmissionSpec(**kw)
+
+
+def test_shedding_releases_store_pins_and_decode_slots():
+    """Shed requests must hold nothing: KV-store pins taken by the routing
+    resolve are dropped, and no decode session is ever admitted for them."""
+    from repro.core.decode import DecodePoolSpec, DecodeSpec
+
+    trace = generate_trace(WORKLOADS["qwen-agent"], 48, rps=24.0, seed=2,
+                           decode_lens=True,
+                           slo_mix={"tight": 0.2, "standard": 0.4,
+                                    "loose": 0.4})
+    spec = _spec(
+        kvstore=_kv_spec(),
+        decode=DecodeSpec(pools=(DecodePoolSpec(name="default",
+                                                slots_per_ep=8),),
+                          mean_out=16),
+        router=RouterSpec(admission=_admission_spec()))
+    sim = ClusterSim(spec, make_policy("mfs"))
+    m = sim.run(trace)
+
+    shed = set(m.shed)
+    assert shed and all(c == "loose" for c in m.shed.values())
+    served = {r.rid for r in trace} - shed
+    assert set(m.ttft) == served             # everyone else still finishes
+    assert shed.isdisjoint(m.tpot)           # no decode slot ever held
+    assert sim.kvstore.summary()["pinned_blocks"] == 0   # pins released
+    assert len(sim.runtime.flows) == 0
+    assert m.decode_stats["live_sessions"] == 0
+    s = m.summary()
+    assert s["n_shed"] == len(shed) and s["n_deferred"] == 0
+    # all-arrivals attainment counts shed as misses; admitted-only doesn't
+    assert s["slo_attainment"] <= s["admitted_attainment"] + 1e-12
+    assert "loose" in s["attainment_by_class"]
+
+
+def test_defer_retries_on_original_slo_clock_then_serves():
+    """A defer-mode controller under a transient queue build-up must retry
+    sheddable requests (not reject them) and serve everyone once the
+    detector recovers — with deadlines still derived from the original
+    arrival, so deferral burns the SLO budget."""
+    trace = generate_trace(WORKLOADS["qwen-conv"], 36, rps=96.0, seed=5,
+                           slo_mix={"tight": 0.0, "standard": 0.3,
+                                    "loose": 0.7})
+    adm = AdmissionSpec(detector="queue_depth",
+                        detector_kw=dict(high=6, low=2), mode="defer",
+                        defer_delay=0.05, max_defers=50)
+    base = ClusterSim(_spec(), make_policy("mfs"))
+    m0 = base.run(trace)
+    sim = ClusterSim(_spec(router=RouterSpec(admission=adm)),
+                     make_policy("mfs"))
+    m = sim.run(trace)
+    assert m.n_deferred > 0
+    assert not m.shed and set(m.ttft) == set(m0.ttft)   # everyone served
+    # the deferred requests kept their original-arrival deadline budget
+    assert m.deadline == m0.deadline
+    assert m.summary()["n_deferred"] == m.n_deferred
+
+
+def test_shedding_protects_admitted_attainment_under_burst():
+    """Overload burst: shedding loose traffic must not hurt — and should
+    help — the TTFT attainment of what was admitted."""
+    from repro.simcluster.trace import ArrivalSpec
+
+    trace = generate_trace(WORKLOADS["qwen-conv"], 72, rps=56.0, seed=7,
+                           arrival=ArrivalSpec(process="mmpp",
+                                               burst_factor=8.0,
+                                               burst_frac=0.15, dwell=2.0),
+                           slo_mix={"tight": 0.2, "standard": 0.4,
+                                    "loose": 0.4})
+    adm = AdmissionSpec(detector="queue_depth",
+                        detector_kw=dict(high=10, low=3))
+    base = ClusterSim(_spec(), make_policy("mfs")).run(trace)
+    ctrl = ClusterSim(_spec(router=RouterSpec(admission=adm)),
+                      make_policy("mfs")).run(trace)
+    assert ctrl.shed                     # the burst actually tripped it
+    assert ctrl.admitted_attainment() >= base.slo_attainment() - 1e-12
+
+
+# --------------------------------------------------- sim <-> serve parity
+@pytest.mark.parametrize("policy,params", [
+    ("kv_affinity", {}),
+    ("round_robin", {}),
+    ("least_backlog", {}),
+    ("session_affinity", {"key": "rid"}),
+])
+def test_sim_and_serve_place_identically(policy, params):
+    """Matched 2-unit configs + matched disjoint-prefix request streams:
+    every policy must pick the same unit for the same rid on both hosts
+    (the routing decision lives in the shared runtime, keyed only on
+    host-parity-exact state)."""
+    import jax
+    from repro.configs import SMOKES
+    from repro.models.lm import build_model
+    from repro.serving import DisaggConfig, DisaggServer, ServeRequest
+    from repro.simcluster.hw import A100
+    from repro.simcluster.trace import Request
+
+    cfg = SMOKES["smollm-360m"]
+    model = build_model(cfg)
+    params_model = model.init(jax.random.PRNGKey(0))
+    rspec = RouterSpec(policy=policy, params=params)
+
+    rng = np.random.default_rng(0)
+    lens = [40, 28, 36, 24, 32]
+    arrivals = [0.0, 0.01, 0.02, 0.03, 0.04]
+
+    srv = DisaggServer(model, params_model, cfg=DisaggConfig(
+        n_prefill_units=2, gpus_per_unit=1, layer_groups=2, hw=A100,
+        n_pages=256, router=rspec))
+    res = srv.serve([ServeRequest(rid=i, arrival=t,
+                                  tokens=rng.integers(0, cfg.vocab,
+                                                      size=(n,)),
+                                  max_new=1)
+                     for i, (t, n) in enumerate(zip(arrivals, lens))])
+    serve_units = {r.rid: r.unit for r in res}
+
+    sim = ClusterSim(ClusterSpec(
+        model=cfg, par=ParallelismSpec(mode="ep", ep=1), n_units=2,
+        gpus_per_server=1, layer_groups=2, slo_mode="per-request", hw=A100,
+        router=rspec), make_policy("mfs"))
+    placed = _record_placements(sim)
+    # disjoint prefixes + reuse_len=0 -> the same no-affinity routing state
+    # the serving path's cold PrefixIndex produces
+    sim.run([Request(rid=i, arrival=t, prompt_len=n, reuse_len=0,
+                     prefix_id=1000 + i)
+             for i, (t, n) in enumerate(zip(arrivals, lens))])
+
+    assert placed == serve_units
+    if policy == "round_robin":
+        assert [serve_units[i] for i in range(5)] == [0, 1, 0, 1, 0]
