@@ -57,14 +57,26 @@ router; the admission half reruns the top burst rate with the default
 controller shedding loose-class traffic — admitted-TTFT attainment must
 improve for every scheduler (``largescale.router.admission.*``).
 
+The **telemetry arm** reruns the Mooncake tail (store on, multi-tenant SLO
+mix, top contended rate) with the telemetry plane enabled for all 5
+policies and turns each policy's misses into a contention-attribution
+table: ``slo_miss_report()`` pins every missed request's lost slack to its
+dominant (stage, link) pair, so "MFS beats EDF" becomes "EDF loses
+tight-class slack queueing P2D on the contended uplinks, MFS doesn't".
+The MFS run also writes ``BENCH_trace_sample.json`` — a Chrome/Perfetto
+trace-event timeline of one missed tight-SLO request (or a served one when
+nothing missed). The collector is a pure observer, so attainment numbers
+match the telemetry-off cells exactly.
+
 Emits CSV rows (``largescale.*``) plus ``BENCH_largescale.json`` with the
 full curve data for plotting, and the fluid-net incremental-allocation
 counters (group fills per reallocation) observed during the sweep. With
-the decode plane, KV store, chunking and the router spec disabled the
-legacy sections are bit-for-bit identical to the pre-decode-plane /
-pre-kvstore / pre-chunking / pre-router sweeps. ``--only router``
-recomputes just the router arm and merges it into an existing
-``BENCH_largescale.json``, leaving every other section untouched.
+the decode plane, KV store, chunking, the router spec and telemetry
+disabled the legacy sections are bit-for-bit identical to the
+pre-decode-plane / pre-kvstore / pre-chunking / pre-router sweeps.
+``--only router`` / ``--only telemetry`` recompute just that arm and merge
+it into an existing ``BENCH_largescale.json``, leaving every other section
+untouched.
 """
 from __future__ import annotations
 
@@ -72,7 +84,7 @@ import json
 import time
 from typing import Dict, List, Optional
 
-from repro.core import make_policy
+from repro.core import TelemetrySpec, make_policy
 from repro.core.decode import DecodePoolSpec, DecodeSpec
 from repro.core.kvstore import KVStoreSpec, TierSpec
 from repro.core.router import AdmissionSpec, RouterSpec
@@ -139,6 +151,15 @@ ROUTER_BURST = ArrivalSpec(process="mmpp", burst_factor=8.0, burst_frac=0.2,
 ROUTER_ADMISSION = AdmissionSpec(detector="queue_depth",
                                  detector_kw=dict(high=12, low=3))
 
+
+# ---- telemetry arm: SLO-miss root causes on the Mooncake tail -----------
+#: same 16-unit sp cluster / tiered store as the KV-reuse sweep, plus the
+#: multi-tenant SLO mix (the tight class is the attribution target) at the
+#: top contended rate; telemetry is a pure observer, so the attainment
+#: numbers equal the telemetry-off cells
+TEL_RATE = KV_RATES[-1]
+N_TEL = 300
+TRACE_SAMPLE_JSON = "BENCH_trace_sample.json"
 
 # ---- chunked-prefill arm: Sarathi chunks on the Mooncake tail -----------
 #: same 16-unit sp cluster / 50 Gbps NIC share as the KV-reuse sweep (the
@@ -479,17 +500,95 @@ def _run_router(rows: List[str], quick: bool = False) -> Dict:
     return rd
 
 
+def _run_telemetry(rows: List[str], quick: bool = False) -> Dict:
+    """Telemetry arm: per-policy SLO-miss root causes on the Mooncake tail.
+
+    Reruns the store-on Mooncake tail with the multi-tenant SLO mix at the
+    top contended rate, telemetry enabled, and turns each policy's misses
+    into a contention-attribution table: ``slo_miss_report()`` pins every
+    miss's lost slack to its dominant (stage, link) pair. The acceptance
+    signal is ``tight`` coverage — >= 90% of missed tight-class requests
+    must attribute to a concrete (stage, link). ``contended_stage_share``
+    records which stage class each policy hands the contended
+    link-seconds to (the cross-plane generalization of the KV-reuse arm's
+    WB share). The MFS run also dumps a Chrome/Perfetto timeline of one
+    missed tight request to ``BENCH_trace_sample.json``."""
+    n = 120 if quick else N_TEL
+    trace = generate_trace(WORKLOADS[KV_WORKLOAD], n, rps=TEL_RATE, seed=0,
+                           warmup=24, arrival=ArrivalSpec(process="mmpp"),
+                           slo_mix=SLO_MIX)
+    td = {"spec": KV_SPEC, "workload": KV_WORKLOAD, "sp": KV_SP,
+          "hw": KV_HW.name, "decode_ratio": KV_DECODE_RATIO,
+          "rate": TEL_RATE, "n_requests": n, "slo_mix": SLO_MIX,
+          "attainment": {}, "attribution": {}, "tight_coverage": {},
+          "contended_stage_share": {}, "links": {}, "trace_sample": None}
+    for pol in POLICIES:
+        spec = _spec_kv(_kvstore_spec())
+        spec.telemetry = TelemetrySpec()
+        sim = ClusterSim(spec, make_policy(pol))
+        t0 = time.time()
+        s = sim.run(trace).summary()
+        tel = sim.telemetry
+        rep = tel.slo_miss_report(top=5)
+        tight = tel.slo_miss_report(slo_class="tight")
+        td["attainment"][pol] = s["slo_attainment"]
+        # the contention-attribution table: top causes ranked by slack lost
+        td["attribution"][pol] = {
+            "n_missed": rep["n_missed"], "n_attributed": rep["n_attributed"],
+            "coverage": rep["coverage"],
+            "causes": [{k: c[k] for k in ("stage", "link", "link_name",
+                                          "n", "slack_lost")}
+                       for c in rep["causes"]]}
+        td["tight_coverage"][pol] = {"n_missed": tight["n_missed"],
+                                     "coverage": tight["coverage"]}
+        td["contended_stage_share"][pol] = tel.contended_stage_share()
+        td["links"][pol] = [{k: lr[k] for k in ("link", "link_name",
+                                                "mean_util", "contended_s",
+                                                "stage_share")}
+                            for lr in tel.link_report(top=3)]
+        assert len(sim.runtime.flows) == 0, "runtime leaked flows"
+        cause = rep["causes"][0] if rep["causes"] else None
+        emit(rows, f"largescale.telemetry.{pol}.rps{TEL_RATE:g}",
+             f"{s['slo_attainment']:.4f}",
+             f"missed={rep['n_missed']} cov={rep['coverage']}"
+             + (f" top={cause['stage']}@{cause['link_name']}"
+                f" (n={cause['n']}, slack={cause['slack_lost']:.2f}s)"
+                if cause else "")
+             + f" wall={time.time() - t0:.0f}s")
+        tc = td["tight_coverage"][pol]
+        emit(rows, f"largescale.telemetry.{pol}.tight_coverage",
+             "null" if tc["coverage"] is None else f"{tc['coverage']:.3f}",
+             f"missed tight-class requests pinned to a (stage, link) pair "
+             f"(n_missed={tc['n_missed']})")
+        if pol == "mfs":
+            # one missed tight request's full timeline for Perfetto; fall
+            # back to any served request if MFS missed nothing tight
+            pick = next((r["rid"] for r in tight["requests"]
+                         if r.get("link") is not None),
+                        next((r["rid"] for r in rep["requests"]
+                              if r.get("link") is not None), None))
+            if pick is None:
+                pick = next(r for r, tr in sorted(tel.requests.items())
+                            if r >= 0 and tr.status == "served")
+            tel.save_chrome_trace(TRACE_SAMPLE_JSON, rids={pick})
+            td["trace_sample"] = {"path": TRACE_SAMPLE_JSON, "rid": pick}
+            emit(rows, "largescale.telemetry.trace_sample",
+                 TRACE_SAMPLE_JSON, f"Chrome trace of rid={pick}, mfs arm")
+    return td
+
+
 def main(quick: bool = False, only: Optional[str] = None):
     rows: List[str] = []
-    if only == "router":
-        # recompute just the router arm and merge it into the committed
+    if only in ("router", "telemetry"):
+        # recompute just that arm and merge it into the committed
         # artifact — every legacy section stays byte-for-byte untouched
         with open(OUT_JSON) as fh:
             result = json.load(fh)
-        result["router"] = _run_router(rows, quick)
+        arm = _run_router if only == "router" else _run_telemetry
+        result[only] = arm(rows, quick)
         with open(OUT_JSON, "w") as fh:
             json.dump(result, fh, indent=2)
-        emit(rows, "largescale.json", OUT_JSON, "router arm merged")
+        emit(rows, "largescale.json", OUT_JSON, f"{only} arm merged")
         return rows
     n = 300 if quick else N_REQUESTS
     rates = RATES[1:3] if quick else RATES
@@ -590,6 +689,7 @@ def main(quick: bool = False, only: Optional[str] = None):
     result["kvreuse"] = _run_kvreuse(rows, quick)
     result["chunked"] = _run_chunked(rows, quick)
     result["router"] = _run_router(rows, quick)
+    result["telemetry"] = _run_telemetry(rows, quick)
 
     with open(OUT_JSON, "w") as fh:
         json.dump(result, fh, indent=2)

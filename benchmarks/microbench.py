@@ -6,7 +6,9 @@ priority-group-size regimes, ``waterfill.incremental.*`` measure the
 dirty-group incremental path (full group fills per reallocation and
 per-event latency vs. forced full fills) under defer-and-promote churn, and
 ``waterfill.warmstart.*`` measure the warm-started within-group fill on the
-wide single-key group (bit-identical rates, patched incidence structure)."""
+wide single-key group (bit-identical rates, patched incidence structure),
+and ``telemetry.overhead`` measures the telemetry collector's wall-clock
+cost on an otherwise-identical cluster run (< 5% budget)."""
 from __future__ import annotations
 
 import time
@@ -226,6 +228,40 @@ def _bench_kvstore(rows, quick: bool = False):
          f"{store2.stats['evictions']:.0f} evictions")
 
 
+def _bench_telemetry_overhead(rows, quick: bool = False):
+    """Telemetry collector cost: the identical ClusterSim run with the
+    collector off vs. fully on (spans + RMLQ audit + link sampling). The
+    collector is a pure observer — the two runs produce bit-identical
+    schedules and metrics (asserted in tests/test_telemetry.py) — so the
+    ratio is pure bookkeeping overhead; the budget is < 5%."""
+    from repro.core import TelemetrySpec
+    from repro.simcluster.papermodels import PAPER_MODELS
+    from repro.simcluster.sim import ClusterSim, ClusterSpec, ParallelismSpec
+    from repro.simcluster.trace import WORKLOADS, generate_trace
+
+    n = 60 if quick else 150
+    reps = 2 if quick else 3
+    trace = generate_trace(WORKLOADS["qwen-conv"], n, rps=12.0, seed=0,
+                           warmup=12)
+
+    def drive(tel) -> float:
+        best = float("inf")
+        for _ in range(reps):
+            spec = ClusterSpec(model=PAPER_MODELS["mixtral-8x7b"],
+                               par=ParallelismSpec(mode="ep", ep=8),
+                               n_units=2, telemetry=tel)
+            sim = ClusterSim(spec, make_policy("mfs"))
+            t0 = time.perf_counter()
+            sim.run(trace)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_off = drive(None)                    # warm caches on the off arm first
+    t_on = drive(TelemetrySpec())
+    emit(rows, "telemetry.overhead", f"{t_on / t_off - 1.0:+.3f}",
+         f"on={t_on:.2f}s off={t_off:.2f}s, full collector, <0.05 budget")
+
+
 def _bench_decode_roofline(rows):
     """Model error of the analytic ``decode_step_time`` against the
     roofline derived from the decode kernel's actual tiling
@@ -274,6 +310,7 @@ def main(quick: bool = False):
     _bench_incremental(rows, n_events=100 if quick else 400)
     _bench_warmstart(rows, n_events=100 if quick else 300)
     _bench_kvstore(rows, quick=quick)
+    _bench_telemetry_overhead(rows, quick=quick)
     _bench_decode_roofline(rows)
     return rows
 

@@ -18,6 +18,9 @@ Public surface:
                                      cluster-level placement policies
     OverloadDetector, AdmissionSpec — overload-triggered admission control
                                      (shed/defer loose-SLO requests)
+    Telemetry, TelemetrySpec       — telemetry plane: lifecycle spans, RMLQ
+                                     decision audit, link-contention
+                                     attribution, SLO-miss root causes
     MsFlowRuntime, RuntimeHost     — shared orchestration runtime (§5)
 """
 from .msflow import Stage, Flow, Coflow, FlowState, new_flow_id
@@ -48,6 +51,8 @@ from .router import (RoutingView, RouterPolicy, KVAffinityRouter,
                      OverloadDetector, QueueDepthDetector, LaxityDebtDetector,
                      register_detector, make_detector,
                      RouterSpec, AdmissionSpec, AdmissionController)
+from .telemetry import (Telemetry, TelemetrySpec, StageLog, FlowSpan,
+                        RequestTrace, link_name)
 from .runtime import MsFlowRuntime, RuntimeHost, RuntimeView
 
 __all__ = [
@@ -70,5 +75,7 @@ __all__ = [
     "make_router", "OverloadDetector", "QueueDepthDetector",
     "LaxityDebtDetector", "register_detector", "make_detector",
     "RouterSpec", "AdmissionSpec", "AdmissionController",
+    "Telemetry", "TelemetrySpec", "StageLog", "FlowSpan", "RequestTrace",
+    "link_name",
     "MsFlowRuntime", "RuntimeHost", "RuntimeView",
 ]

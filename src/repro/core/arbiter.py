@@ -61,6 +61,9 @@ class MFSScheduler(Policy):
         #: periodic MLU re-evaluation pitch once a request finished computing
         self.tick_interval = tick_interval
         self.rmlq = RMLQ(cfg)
+        #: optional telemetry collector — receives the RMLQ decision audit
+        #: plus the MLU/RLI inputs computed right before each decision
+        self.telemetry = None
 
     # ------------------------------------------------------------ admission
     def on_flow_submitted(self, flow: Flow, view: SchedView) -> None:
@@ -71,9 +74,17 @@ class MFSScheduler(Policy):
 
     def reset(self) -> None:
         self.rmlq = RMLQ(self.cfg)
+        self.rmlq.audit = self.telemetry
+
+    def attach_telemetry(self, telemetry) -> None:
+        """Route the RMLQ decision audit into ``telemetry`` (survives
+        ``reset()``; pass None to detach)."""
+        self.telemetry = telemetry
+        self.rmlq.audit = telemetry
 
     # ------------------------------------------------------------ promotion
     def _target_level(self, flow: Flow, view: SchedView) -> int:
+        tel = self.telemetry
         if flow.stage in (Stage.P2D, Stage.D2D, Stage.WB):
             # D2D rebalancing and KV-store writebacks enter the RMLQ with
             # their own laxity: the same MLU ladder over their derived
@@ -85,11 +96,20 @@ class MFSScheduler(Policy):
                 cap, rho = view.mlu_inputs(flow, lvl)
             except (AttributeError, NotImplementedError):
                 cap, rho = view.bottleneck(flow)
-            u = mlu(flow.remaining, flow.deadline - view.now, cap, rho)
+            laxity = flow.deadline - view.now
+            u = mlu(flow.remaining, laxity, cap, rho)
+            if tel is not None:
+                tel.note_urgency(flow.fid, {
+                    "mlu": u, "laxity": laxity, "remaining": flow.remaining,
+                    "cap": cap, "rho": rho})
             return mlu_level(u, self.cfg)
         if flow.stage == Stage.COLLECTIVE:
             return 2                       # RLI = 0: top of the implicit band
         rli = max(0, flow.target_layer - view.l_curr(flow.unit))
+        if tel is not None:
+            tel.note_urgency(flow.fid, {
+                "rli": rli, "target_layer": flow.target_layer,
+                "l_curr": view.l_curr(flow.unit)})
         return rli_level(rli, self.cfg)
 
     def assign(self, flows: Sequence[Flow], view: SchedView,

@@ -214,6 +214,15 @@ class DecodePlane:
     def _log(self, kind: str, rid: int, ep: int, t: float, extra: int = 0) -> None:
         if self.trace:
             self.event_log.append((kind, rid, ep, extra, t))
+        # telemetry plane: every decode-plane event funnels through here, so
+        # one forward covers admit/finish/d2d/migrated/abandon/spill/evict.
+        # Per-token steps are summarized by the finish event (tokens_done in
+        # ``extra``) rather than flooding the per-request lifecycle.
+        # plane may run unbound (or against a stub runtime) in tests
+        tel = getattr(getattr(self, "rt", None), "telemetry", None)
+        if tel is not None and kind != "token":
+            tel.request_event(rid, "decode_" + kind,
+                              {"ep": ep, "extra": extra}, t=t)
 
     def _release_kv(self, rid: int) -> None:
         """Release the request's KV-store pins (held through decode so the

@@ -38,16 +38,25 @@ class RMLQ:
         self.K = cfg.K
         self._queues: List[Dict[int, Flow]] = [dict() for _ in range(cfg.K + 2)]
         self._level: Dict[int, int] = {}
+        #: optional decision-audit sink (repro.core.telemetry.Telemetry);
+        #: None keeps every record site a single falsy check
+        self.audit = None
 
     # ------------------------------------------------------------------ admin
     def insert(self, flow: Flow, level: int) -> None:
         """Admit a flow at its initial (deferred) level."""
-        level = self._clamp(level, flow)
+        clamped = self._clamp(level, flow)
         if flow.fid in self._level:
             raise ValueError(f"flow {flow.fid} already queued")
-        self._level[flow.fid] = level
-        flow.level = level
-        self._queues[level][flow.fid] = flow
+        self._level[flow.fid] = clamped
+        flow.level = clamped
+        self._queues[clamped][flow.fid] = flow
+        if self.audit is not None:
+            self.audit.rmlq_event("insert", flow, None, clamped)
+            if level < clamped == 2:
+                # I3 band clamp: the flow asked for the critical reservation
+                # but its band (D2D/WB or no explicit deadline) bars level 1
+                self.audit.rmlq_event("clamp", flow, level, clamped)
 
     def remove(self, flow: Flow) -> None:
         lvl = self._level.pop(flow.fid, None)
@@ -72,13 +81,23 @@ class RMLQ:
         cur = self._level.get(flow.fid)
         if cur is None:
             raise KeyError(f"flow {flow.fid} not queued")
+        wanted = new_level
         new_level = self._clamp(new_level, flow)
         if new_level >= cur:
+            if self.audit is not None and wanted < new_level == 2 \
+                    and wanted < cur:
+                # the urgency called for level 1 but the band clamp held the
+                # flow back — an invisible non-decision without the audit
+                self.audit.rmlq_event("clamp", flow, wanted, new_level)
             return False
         del self._queues[cur][flow.fid]
         self._queues[new_level][flow.fid] = flow
         self._level[flow.fid] = new_level
         flow.level = new_level
+        if self.audit is not None:
+            self.audit.rmlq_event("promote", flow, cur, new_level)
+            if wanted < new_level == 2:
+                self.audit.rmlq_event("clamp", flow, wanted, new_level)
         return True
 
     def demote_to_scavenger(self, flow: Flow) -> None:
@@ -94,6 +113,8 @@ class RMLQ:
         self._level[flow.fid] = lvl
         flow.level = lvl
         flow.state = FlowState.PRUNED
+        if self.audit is not None:
+            self.audit.rmlq_event("scavenge", flow, cur, lvl)
 
     def readmit(self, flow: Flow, level: int) -> None:
         """Re-admit a scavenged flow (runtime turned out better than the
@@ -106,6 +127,8 @@ class RMLQ:
         self._level[flow.fid] = level
         flow.level = level
         flow.state = FlowState.ACTIVE
+        if self.audit is not None:
+            self.audit.rmlq_event("readmit", flow, self.K + 1, level)
 
     # ---------------------------------------------------------------- queries
     def flows(self, level: Optional[int] = None) -> Iterable[Flow]:

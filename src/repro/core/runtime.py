@@ -57,6 +57,7 @@ from .router import (AdmissionController, KVAffinityRouter, RouterPolicy,
                      RoutingView)
 from .stages import (BatchState, ChunkPlan, PrefillItem, StageEmitter,
                      StageProfile)
+from .telemetry import StageLog, Telemetry
 
 __all__ = ["RuntimeHost", "MsFlowRuntime", "RuntimeView"]
 
@@ -190,7 +191,8 @@ class MsFlowRuntime:
                  trace_stages: bool = False, stage_log_limit: int = 100_000,
                  decode=None, kvstore=None,
                  router: Optional[RouterPolicy] = None,
-                 admission: Optional[AdmissionController] = None):
+                 admission: Optional[AdmissionController] = None,
+                 telemetry: Optional[Telemetry] = None):
         self.topo = topo
         self.net = net
         self.evq = evq
@@ -256,11 +258,20 @@ class MsFlowRuntime:
         # optional observability: (rid, stage, group, size, deadline) per
         # submitted flow, consumed by the parity tests and the reports of
         # examples/serve_disagg.py; bounded so tracing cannot grow O(history)
+        # — StageLog counts (and warns about) rows the bound drops
         self.trace_stages = trace_stages
-        self.stage_log: Deque[Tuple[int, Stage, int, float, Optional[float]]] \
-            = deque(maxlen=stage_log_limit)
+        self.stage_log: StageLog = StageLog(maxlen=stage_log_limit)
         self.submit_level: Dict[int, int] = {}   # live flows only
         self._promoted: Dict[Stage, int] = {}    # evicted flows' promotions
+        #: telemetry plane (repro.core.telemetry) — None keeps every probe
+        #: site a single falsy check; the collector is a pure observer, so
+        #: enabling it never changes scheduling outcomes
+        self.telemetry = telemetry
+        if telemetry is not None:
+            telemetry.bind(lambda: self.net.now, topo,
+                           t_first_decode=self._t_first_decode)
+            if isinstance(policy, MFSScheduler):
+                policy.attach_telemetry(telemetry)
 
     # ---------------------------------------------------------- calibration
     def calibrate_slo(self, items: Sequence[PrefillItem]) -> None:
@@ -307,7 +318,12 @@ class MsFlowRuntime:
             flow.state = FlowState.PRUNED
         self.policy.on_flow_submitted(flow, self.view)
         self.submit_level[flow.fid] = flow.level
-        if self.trace_stages:
+        if self.telemetry is not None:
+            # with telemetry on, the legacy stage log is backed by the same
+            # probe (one append site, identical rows)
+            self.telemetry.flow_submitted(
+                flow, self.stage_log if self.trace_stages else None)
+        elif self.trace_stages:
             self.stage_log.append((flow.rid, flow.stage, flow.target_layer,
                                    flow.size, flow.deadline))
 
@@ -355,6 +371,8 @@ class MsFlowRuntime:
             self.batch_of_request[it.rid] = bs
             bs.p2d_pending[it.rid] = set()
         self.host.on_batch_started(bs)
+        if self.telemetry is not None:
+            self.telemetry.on_batch_started(bs)
         for f in self.emitter.stage1(bs):
             self._submit(f)
         if self.policy.uses_inter_request:
@@ -395,6 +413,8 @@ class MsFlowRuntime:
         else:
             dur = bs.chunk_time[g][c] \
                 + (self._recompute_penalty(bs, g) if c == 0 else 0.0)
+        if self.telemetry is not None:
+            self.telemetry.compute_open(bs, g, c)
         self.evq.push(self.net.now + dur, "compute", (bs.bid, bs.unit, g, c))
 
     def _recompute_penalty(self, bs: BatchState, g: int) -> float:
@@ -435,6 +455,8 @@ class MsFlowRuntime:
     def _evict_flow(self, f: Flow) -> None:
         """Drop a finished/cancelled flow from runtime state, folding its
         promotion outcome into the compact per-stage counters first."""
+        if self.telemetry is not None:
+            self.telemetry.flow_closed(f, self.net)
         self.flows.pop(f.fid, None)
         lvl0 = self.submit_level.pop(f.fid, None)
         if lvl0 is not None and f.level < lvl0:
@@ -470,6 +492,8 @@ class MsFlowRuntime:
         if item.owner_unit < 0:
             item.owner_unit = u             # no-owner sentinel: self-owned
         item.unit = u
+        if self.telemetry is not None:
+            self.telemetry.on_arrival(item, u)
         if self.decode is not None and not item.pool:
             item.pool = self.decode.pick_pool(item)
         item.ideal_ttft = self.profile.ideal_ttft(item)
@@ -500,15 +524,21 @@ class MsFlowRuntime:
                     item.deferrals += 1
                     self.n_deferred += 1
                     self.host.on_deferred(item)
+                    if self.telemetry is not None:
+                        self.telemetry.on_deferred(item)
                     self.evq.push(self.net.now + self.admission.spec.defer_delay,
                                   "arr", item)
                 else:
                     self.n_shed += 1
                     self.host.on_shed(item)
+                    if self.telemetry is not None:
+                        self.telemetry.on_shed(item)
                 return
         self.queues[u].append(item)
         self.backlog_tokens[u] += item.n_tokens
         self.host.on_admitted(item)
+        if self.telemetry is not None:
+            self.telemetry.on_admitted(item)
         self._maybe_start_batch(u)
 
     def _on_compute_done(self, bid: int, unit: int, g: int, c: int = 0) -> None:
@@ -516,6 +546,8 @@ class MsFlowRuntime:
         if bs is None or bs.bid != bid or bs.cur_group != g \
                 or bs.cur_chunk != c or bs.phase != "compute":
             return   # stale
+        if self.telemetry is not None:
+            self.telemetry.compute_close(unit)
         if bs.chunk_plan is None:
             for f in self.emitter.stage3(bs, g, self._t_first_decode):
                 self._submit(f)
@@ -583,6 +615,8 @@ class MsFlowRuntime:
         self.red_ranks.pop(item.rid, None)
         self.pruned_rids.discard(item.rid)
         self.host.on_request_done(item, bs)
+        if self.telemetry is not None:
+            self.telemetry.on_request_done(item, bs)
         if self.kvstore is not None:
             # KV-reuse plane admission: the chain's blocks are registered in
             # the origin tier and loose-deadline Stage-WB replication flows
@@ -631,6 +665,9 @@ class MsFlowRuntime:
             if bs is not None and bs.coll is not None and f.coflow == bs.coll.cid:
                 if bs.coll.done():
                     bs.coll.finished = self.net.now
+                    if self.telemetry is not None:
+                        self.telemetry.coll_wait(
+                            bs.bid, self.net.now - bs.coll_started)
                     co = bs.coll
                     self.host.on_coflow_done(bs, co, self._coflow_ideal(co))
                     if bs.phase == "wait_coll":
@@ -729,6 +766,8 @@ class MsFlowRuntime:
                                        drop_budget=budget_left)
         rank_of_batch = {bid: i for i, bid in enumerate(sched.order)}
         newly_pruned = {rid for (_, rid) in sched.pruned}
+        if self.telemetry is not None:
+            self.telemetry.red_run(sched.order, newly_pruned, len(batches))
         for bs in self.active_batch.values():
             for it in bs.items:
                 self.red_ranks[it.rid] = rank_of_batch.get(bs.bid, 0)
@@ -739,11 +778,15 @@ class MsFlowRuntime:
                     self.pruned_rids.add(it.rid)
                     self.ever_pruned.add(it.rid)
                     self.n_pruned += 1
+                    if self.telemetry is not None:
+                        self.telemetry.on_pruned(it.rid)
                     self._apply_prune(bs, it)
         # re-admission: requests no longer in the pruned set
         for rid in list(self.pruned_rids):
             if rid not in newly_pruned and rid in self.batch_of_request:
                 self.pruned_rids.discard(rid)
+                if self.telemetry is not None:
+                    self.telemetry.on_readmitted(rid)
                 for f in self.net.flows.values():
                     if f.rid == rid and f.state == FlowState.PRUNED:
                         f.state = FlowState.ACTIVE
@@ -774,6 +817,10 @@ class MsFlowRuntime:
                 break
             t, kind, payload, epoch = popped
             n_ev += 1
+            if self.telemetry is not None:
+                # BEFORE advance: current rates are exactly the rates active
+                # over [net.now, t], so span/link integration here is exact
+                self.telemetry.on_advance(self.net, t)
             done = self.net.advance(t)
             for f in done:
                 self._on_flow_done(f)

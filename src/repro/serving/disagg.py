@@ -56,6 +56,7 @@ from ..core.router import AdmissionSpec, RouterSpec
 from ..core.runtime import MsFlowRuntime, RuntimeHost
 from ..core.stages import (BatchState, ChunkSpec, GroupPlan, ParallelismSpec,
                            PrefillItem, StageEmitter, StageProfile)
+from ..core.telemetry import Telemetry, TelemetrySpec
 from ..netsim.events import EventQueue
 from ..netsim.fluid import FluidNet
 from ..netsim.topology import SingleToR
@@ -127,6 +128,10 @@ class DisaggConfig:
     # router + admission plane (None = the default ``kv_affinity`` policy
     # with admission off — the historical placement, bit-identical).
     router: Optional[RouterSpec] = None
+    # telemetry plane (None = off, zero overhead); read the collector via
+    # ``DisaggServer.telemetry`` after a run for ttft_breakdown /
+    # slo_miss_report / the RMLQ audit / Chrome trace export
+    telemetry: Optional[TelemetrySpec] = None
 
     def chunk_tokens(self) -> int:
         return self.chunk.chunk_tokens if self.chunk is not None else 0
@@ -199,6 +204,9 @@ class DisaggServer(RuntimeHost):
                                pool_eps=pool_eps,
                                chunk_tokens=cfg.chunk_tokens())
         rspec = cfg.router
+        self.telemetry: Optional[Telemetry] = \
+            Telemetry(cfg.telemetry) if cfg.telemetry is not None \
+            and cfg.telemetry.enabled else None
         self.runtime = MsFlowRuntime(
             self.topo, FluidNet(self.topo), EventQueue(), self.policy,
             self.profile, emitter, host=self, n_units=cfg.n_prefill_units,
@@ -207,7 +215,8 @@ class DisaggServer(RuntimeHost):
             drop_budget=cfg.drop_budget, decode=self.decode_plane,
             kvstore=self.kvstore,
             router=rspec.build() if rspec is not None else None,
-            admission=rspec.build_admission() if rspec is not None else None)
+            admission=rspec.build_admission() if rspec is not None else None,
+            telemetry=self.telemetry)
 
         self.engines = [ServingEngine(model, params)
                         for _ in range(cfg.n_prefill_units)]

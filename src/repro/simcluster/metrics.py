@@ -67,6 +67,9 @@ class SimMetrics:
     # --- router/admission plane (empty when admission control is off) ---
     shed: Dict[int, str] = field(default_factory=dict)   # rid -> slo_class
     n_deferred: int = 0                                  # defer retries total
+    # rows the bounded stage log dropped on overflow (0 = trace complete;
+    # nonzero means parity/attribution over the log would be partial)
+    stage_log_dropped: int = 0
 
     # ------------------------------------------------------------- summaries
     def _rids(self):
@@ -247,4 +250,6 @@ class SimMetrics:
             s["admitted_attainment"] = self.admitted_attainment()
             s["attainment_by_class"] = self.slo_attainment_by_class()
             s["admitted_by_class"] = self.admitted_attainment_by_class()
+        if self.stage_log_dropped:   # bounded stage trace overflowed
+            s["stage_log_dropped"] = self.stage_log_dropped
         return s

@@ -39,13 +39,15 @@ from ..core.router import AdmissionSpec, RouterSpec
 from ..core.runtime import MsFlowRuntime, RuntimeHost
 from ..core.stages import (BatchState, ChunkSpec, GroupPlan, ParallelismSpec,
                            PrefillItem, StageEmitter, StageProfile)
+from ..core.telemetry import Telemetry, TelemetrySpec
 from ..netsim import EventQueue, FatTree, FluidNet, SingleToR, Topology
 from .hw import HW, A100
 from .metrics import CoflowRecord, SimMetrics
 from .trace import Request
 
 __all__ = ["ParallelismSpec", "ClusterSpec", "ClusterSim", "ChunkSpec",
-           "DecodeSpec", "KVStoreSpec", "RouterSpec", "AdmissionSpec"]
+           "DecodeSpec", "KVStoreSpec", "RouterSpec", "AdmissionSpec",
+           "TelemetrySpec"]
 
 
 @dataclass
@@ -87,6 +89,13 @@ class ClusterSpec:
     # bit-for-bit). A spec picks the placement policy from the router
     # registry and may attach overload-triggered admission control.
     router: Optional[RouterSpec] = None
+    # telemetry plane (None = off, the legacy zero-overhead path — stage
+    # traces, TTFTs and benchmark sections stay byte-identical). With a spec
+    # attached the runtime records request-lifecycle spans, the RMLQ/
+    # Algorithm-1 decision audit and per-link contention telemetry; read
+    # them via ``ClusterSim.telemetry`` (ttft_breakdown / slo_miss_report /
+    # link_report / to_chrome_trace).
+    telemetry: Optional[TelemetrySpec] = None
 
     def chunk_tokens(self) -> int:
         return self.chunk.chunk_tokens if self.chunk is not None else 0
@@ -155,6 +164,9 @@ class ClusterSim(RuntimeHost):
                                pool_eps=pool_eps,
                                chunk_tokens=spec.chunk_tokens())
         rspec = spec.router
+        self.telemetry: Optional[Telemetry] = \
+            Telemetry(spec.telemetry) if spec.telemetry is not None \
+            and spec.telemetry.enabled else None
         self.runtime = MsFlowRuntime(
             self.topo, FluidNet(self.topo), EventQueue(), policy,
             self.profile, emitter, host=self, n_units=spec.n_units,
@@ -163,7 +175,8 @@ class ClusterSim(RuntimeHost):
             drop_budget=spec.drop_budget, contention_free=contention_free,
             decode=self.decode_plane, kvstore=self.kvstore,
             router=rspec.build() if rspec is not None else None,
-            admission=rspec.build_admission() if rspec is not None else None)
+            admission=rspec.build_admission() if rspec is not None else None,
+            telemetry=self.telemetry)
         self.metrics = SimMetrics(policy=policy.name)
 
     # kept as properties so tooling (and tests) can poke at the shared state
@@ -265,6 +278,7 @@ class ClusterSim(RuntimeHost):
         self.runtime.run(max_events=max_events)
         self.metrics.pruned = self.runtime.n_pruned
         self.metrics.n_deferred = self.runtime.n_deferred
+        self.metrics.stage_log_dropped = self.runtime.stage_log.dropped
         if self.decode_plane is not None:
             self.metrics.decode_stats = self.decode_plane.summary()
         if self.kvstore is not None:

@@ -1,0 +1,357 @@
+"""Telemetry plane: span lifecycle completeness, partial traces for
+shed/deferred/pruned requests, sim<->serve span parity, RMLQ decision-audit
+consistency with ``promoted_count``, Perfetto export schema, the
+zero-overhead (bit-identical scheduling) guarantee, and the stage-log
+dropped-rows counter."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import Stage, make_policy
+from repro.core.telemetry import StageLog, Telemetry, TelemetrySpec
+from repro.simcluster.hw import A100, HW
+from repro.simcluster.papermodels import PAPER_MODELS
+from repro.simcluster.sim import ClusterSim, ClusterSpec, ParallelismSpec
+from repro.simcluster.trace import WORKLOADS, generate_trace
+
+
+def _spec(**kw):
+    kw.setdefault("par", ParallelismSpec(mode="ep", ep=8))
+    kw.setdefault("n_units", 2)
+    kw.setdefault("telemetry", TelemetrySpec())
+    return ClusterSpec(model=PAPER_MODELS["mixtral-8x7b"], **kw)
+
+
+def _run(spec=None, policy="mfs", n=40, rps=10.0, seed=0, workload="qwen-conv",
+         **trace_kw):
+    trace = generate_trace(WORKLOADS[workload], n, rps=rps, seed=seed,
+                           warmup=8, **trace_kw)
+    sim = ClusterSim(spec if spec is not None else _spec(),
+                     make_policy(policy), seed=seed)
+    m = sim.run(trace)
+    return sim, m
+
+
+# ------------------------------------------------------------ span lifecycle
+def test_span_lifecycle_completeness():
+    """Every emitted flow opens exactly one span and closes it; with
+    trace_stages on, the telemetry-backed stage log matches the spans
+    row-for-row; every served request's TTFT decomposes exactly."""
+    sim, m = _run()
+    tel = sim.telemetry
+    assert tel is not None
+    s = tel.summary()
+    assert s["flow_spans"] > 0 and s["open_spans"] == 0
+    assert all(v == 0 for v in s["dropped"].values())
+    for sp in tel.flow_spans.values():
+        assert sp.end_state in ("done", "cancelled", "pruned")
+        assert sp.finished is not None and sp.finished >= sp.created
+        assert sp.idle >= 0 and sp.xfer >= 0
+        # local (src == dst) flows ride an empty route: no line rate
+        assert sp.line_cap > 0 or sp.src == sp.dst
+    # every measured request: served, with an exact TTFT decomposition
+    for rid in (r for r in m.ttft if r >= 0):
+        tr = tel.requests[rid]
+        assert tr.status == "served"
+        kinds = [k for (_, k, _) in tr.events]
+        assert kinds[0] == "arrive" and "admit" in kinds \
+            and "batch" in kinds and "first_token" in kinds
+        bd = tel.ttft_breakdown(rid)
+        total = (bd["queue"] + bd["stall_s1"] + bd["compute"]
+                 + bd["coll_wait"] + bd["p2d_tail"] + bd["first_decode"])
+        assert total == pytest.approx(bd["ttft"], rel=1e-6, abs=1e-9)
+        assert "P2D" in bd["stages"]
+
+
+def test_stage_log_backed_by_telemetry_matches_legacy_rows():
+    """With telemetry on AND trace_stages on, the legacy stage_log rows are
+    produced by the telemetry probe — identical to the telemetry-off log."""
+    trace = generate_trace(WORKLOADS["qwen-conv"], 24, rps=8.0, seed=1,
+                           warmup=4)
+    logs = []
+    for tel_spec in (None, TelemetrySpec()):
+        sim = ClusterSim(_spec(telemetry=tel_spec), make_policy("mfs"))
+        sim.runtime.trace_stages = True
+        sim.run(trace)
+        logs.append(list(sim.runtime.stage_log))
+    assert logs[0] == logs[1] and len(logs[0]) > 0
+
+
+# ------------------------------------------------------------ partial traces
+def test_partial_trace_shed_and_attribution():
+    """Shed requests produce a well-formed partial trace (arrive -> route ->
+    shed, no batch) and the miss report attributes them to admission."""
+    from repro.core.router import AdmissionSpec, RouterSpec
+
+    spec = _spec(router=RouterSpec(admission=AdmissionSpec(
+        detector="queue_depth", detector_kw=dict(high=0.0, low=-1.0))))
+    sim, m = _run(spec=spec, n=48, rps=24.0, seed=2, workload="qwen-agent",
+                  slo_mix={"tight": 0.2, "standard": 0.4, "loose": 0.4})
+    tel = sim.telemetry
+    shed = [r for r in m.shed if r >= 0]
+    assert shed
+    for rid in shed:
+        tr = tel.requests[rid]
+        assert tr.status == "shed" and tr.batch == -1 and not tr.flows
+        kinds = [k for (_, k, _) in tr.events]
+        assert kinds[-1] == "shed" and "batch" not in kinds
+        rec = tel.attribute_miss(rid)
+        assert rec["stage"] == "admission" and rec["link"] is None
+    rep = tel.slo_miss_report()
+    assert rep["n_missed"] >= len(shed)
+    assert any(c["stage"] == "admission" for c in rep["causes"])
+
+
+def test_partial_trace_deferred_then_served():
+    """Deferred requests record every defer round and still complete."""
+    from repro.core.router import AdmissionSpec, RouterSpec
+
+    adm = AdmissionSpec(detector="queue_depth",
+                        detector_kw=dict(high=6, low=2), mode="defer",
+                        defer_delay=0.05, max_defers=50)
+    sim, m = _run(spec=_spec(router=RouterSpec(admission=adm)), n=36,
+                  rps=96.0, seed=5,
+                  slo_mix={"tight": 0.0, "standard": 0.3, "loose": 0.7})
+    tel = sim.telemetry
+    assert m.n_deferred > 0
+    deferred = [t for t in tel.requests.values() if t.n_deferrals > 0]
+    assert deferred
+    for tr in deferred:
+        kinds = [k for (_, k, _) in tr.events]
+        assert kinds.count("defer") == tr.n_deferrals
+        # each retry re-routes: one route event per arrival attempt
+        assert kinds.count("route") == tr.n_deferrals + 1
+        assert tr.status == "served"
+
+
+# ----------------------------------------------------------- serve-path JAX
+@pytest.fixture(scope="module")
+def smollm():
+    import jax
+    from repro.configs import SMOKES
+    from repro.models.lm import build_model
+    cfg = SMOKES["smollm-360m"]
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def test_sim_serve_span_parity(smollm):
+    """Matched 2-request, single-unit config: the telemetry flow spans
+    (stage, group, size, deadline) must agree between ClusterSim and the
+    real-JAX DisaggServer — same emitter, same runtime, same collector."""
+    from repro.serving import DisaggConfig, DisaggServer, ServeRequest
+    from repro.simcluster.trace import Request
+
+    cfg, model, params = smollm
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab, size=(32,))
+    suffix = rng.integers(0, cfg.vocab, size=(12,))
+
+    srv = DisaggServer(model, params, cfg=DisaggConfig(
+        n_prefill_units=1, gpus_per_unit=1, layer_groups=2, hw=A100,
+        n_pages=128, telemetry=TelemetrySpec()))
+    srv.serve([
+        ServeRequest(rid=0, arrival=0.0, tokens=prefix, max_new=1),
+        ServeRequest(rid=1, arrival=0.05,
+                     tokens=np.concatenate([prefix, suffix]), max_new=1),
+    ])
+
+    sim = ClusterSim(ClusterSpec(
+        model=cfg, par=ParallelismSpec(mode="ep", ep=1), n_units=1,
+        gpus_per_server=1, layer_groups=2, slo_mode="per-request", hw=A100,
+        telemetry=TelemetrySpec()), make_policy("mfs"))
+    sim.run([
+        Request(rid=0, arrival=0.0, prompt_len=32, reuse_len=0, prefix_id=0),
+        Request(rid=1, arrival=0.05, prompt_len=44, reuse_len=32,
+                prefix_id=0),
+    ])
+
+    def spans(tel, rid):
+        return [(sp.stage, sp.group, sp.size, sp.deadline)
+                for sp in tel.flow_spans.values() if sp.rid == rid]
+
+    got, want = spans(srv.telemetry, 1), spans(sim.telemetry, 1)
+    assert len(got) == len(want) > 0
+    assert {s for s, *_ in got} == {Stage.KV_REUSE, Stage.P2D}
+    for (s_a, g_a, sz_a, dl_a), (s_b, g_b, sz_b, dl_b) in zip(got, want):
+        assert (s_a, g_a) == (s_b, g_b)
+        assert sz_a == pytest.approx(sz_b, rel=1e-12)
+        if dl_a is None or dl_b is None:
+            assert dl_a == dl_b
+        else:
+            assert dl_a == pytest.approx(dl_b, rel=1e-12)
+    # both hosts decompose the request's TTFT the same way
+    for key in ("queue", "stall_s1", "compute", "coll_wait", "p2d_tail"):
+        a = srv.telemetry.ttft_breakdown(1)[key]
+        b = sim.telemetry.ttft_breakdown(1)[key]
+        assert a == pytest.approx(b, rel=1e-9, abs=1e-12)
+
+
+def test_partial_trace_pruned_serve_path(smollm):
+    """Algorithm-1 pruning on the serving path: pruned requests carry the
+    pruned lifecycle event and their scavenged flows close as pruned
+    spans (well-formed partial traces, never left open)."""
+    from repro.core.arbiter import MFSScheduler
+    from repro.serving import DisaggConfig, DisaggServer, ServeRequest
+
+    cfg, model, params = smollm
+    slow_nic = HW("slow", flops=A100.flops, hbm_bw=A100.hbm_bw,
+                  nic_bw=2e5, scaleup_bw=A100.scaleup_bw)
+    srv = DisaggServer(model, params, policy=MFSScheduler(),
+                       cfg=DisaggConfig(n_prefill_units=2, gpus_per_unit=1,
+                                        layer_groups=2, hw=slow_nic,
+                                        slo_scale=1.0, n_pages=256,
+                                        telemetry=TelemetrySpec()))
+    rng = np.random.default_rng(1)
+    reqs = [ServeRequest(rid=i, arrival=i * 1e-5,
+                         tokens=rng.integers(0, cfg.vocab,
+                                             size=(64 + 8 * i,)),
+                         max_new=1)
+            for i in range(5)]
+    srv.serve(reqs)
+    rt, tel = srv.runtime, srv.telemetry
+    assert rt.n_pruned > 0
+    pruned = [tr for tr in tel.requests.values()
+              if any(k == "pruned" for (_, k, _) in tr.events)]
+    assert len(pruned) >= 1
+    assert {sp.end_state for sp in tel.flow_spans.values()} \
+        <= {"done", "cancelled", "pruned"}
+    # the Algorithm-1 audit recorded the pruning decisions (the per-flow
+    # scavenge record only appears when the rid had live flows to demote
+    # at decision time; the red_run entry always carries the pruned set)
+    red = tel.audit_events("red_run")
+    audited_pruned = set().union(*(ev["pruned"] for ev in red))
+    assert {tr.rid for tr in pruned} <= audited_pruned
+
+
+# --------------------------------------------------------------- audit chain
+def test_rmlq_audit_matches_promoted_count():
+    """The audited per-flow level history reproduces the runtime's
+    promotion counters exactly, and promote decisions carry the MLU/RLI
+    inputs that drove them."""
+    sim, m = _run(rps=16.0)
+    tel, rt = sim.telemetry, sim.runtime
+    assert tel.rmlq_promoted_count() == rt.promoted_count() > 0
+    for st in (Stage.KV_REUSE, Stage.P2D):
+        assert tel.rmlq_promoted_count(st) == rt.promoted_count(st)
+    promotes = tel.audit_events("promote")
+    assert promotes
+    for ev in promotes:
+        assert ev["to"] < ev["from"]
+        assert "inputs" in ev
+        assert ("mlu" in ev["inputs"]) or ("rli" in ev["inputs"])
+    # Algorithm-1 re-evaluations were audited too
+    assert len(tel.audit_events("red_run")) == rt.n_red_runs > 0
+    inserts = tel.audit_events("insert")
+    assert len(inserts) == len(tel.flow_spans)
+    # level-1 entries are flagged as the critical reservation (I3)
+    for ev in inserts + promotes:
+        if ev["to"] == 1:
+            assert ev.get("reserved") is True
+        else:
+            assert "reserved" not in ev
+
+
+# ------------------------------------------------------------ perfetto export
+def test_perfetto_export_schema(tmp_path):
+    """Chrome trace-event JSON: every event carries name/ph/ts/pid/tid,
+    complete events carry a non-negative dur, async b/e pairs balance."""
+    import json
+
+    sim, m = _run(n=24, rps=8.0)
+    tel = sim.telemetry
+    path = tmp_path / "trace.json"
+    tel.save_chrome_trace(str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    assert evs
+    opened = {}
+    for ev in evs:
+        assert {"name", "ph", "ts", "pid", "tid"} <= set(ev)
+        assert isinstance(ev["ts"], (int, float)) and ev["ts"] >= 0
+        assert ev["ph"] in ("X", "b", "e", "i", "M")
+        if ev["ph"] == "X":
+            assert ev["dur"] >= 0
+        elif ev["ph"] == "b":
+            opened[(ev["pid"], ev["id"])] = opened.get(
+                (ev["pid"], ev["id"]), 0) + 1
+        elif ev["ph"] == "e":
+            opened[(ev["pid"], ev["id"])] -= 1
+    assert all(v == 0 for v in opened.values())
+    # a filtered export contains only the requested request's lane
+    one = [r for r in m.ttft if r >= 0][0]
+    sub = tel.to_chrome_trace(rids={one})["traceEvents"]
+    assert 0 < len(sub) < len(evs)
+    for ev in sub:
+        rid = (ev.get("args") or {}).get("rid", ev.get("id"))
+        if ev.get("cat") in ("request", "lifecycle",
+                             "net.KV_REUSE", "net.P2D"):
+            assert rid == one
+
+
+# ------------------------------------------------------------- zero overhead
+def test_telemetry_is_bit_identical_on_vs_off():
+    """The collector is a pure observer: enabling it must not change a
+    single scheduling outcome — TTFTs, stage traces and summaries are
+    identical with telemetry on and off."""
+    trace = generate_trace(WORKLOADS["qwen-conv"], 32, rps=12.0, seed=3,
+                           warmup=8)
+    runs = []
+    for tel_spec in (None, TelemetrySpec()):
+        sim = ClusterSim(_spec(telemetry=tel_spec), make_policy("mfs"),
+                         seed=3)
+        sim.runtime.trace_stages = True
+        m = sim.run(trace)
+        runs.append((m, list(sim.runtime.stage_log)))
+    (m0, log0), (m1, log1) = runs
+    assert m0.ttft == m1.ttft            # exact float equality
+    assert m0.deadline == m1.deadline
+    assert m0.stall_time == m1.stall_time
+    assert log0 == log1
+    assert m0.summary() == m1.summary()
+
+
+def test_link_telemetry_accounting():
+    """Per-link byte-time integrates to at most capacity x wall-clock and
+    the per-stage shares on every link sum to one."""
+    sim, _ = _run(rps=16.0)
+    tel = sim.telemetry
+    assert tel.link_byte_time                 # something was sampled
+    span = tel._t_end - tel._t0
+    for lid, bt in tel.link_byte_time.items():
+        assert bt <= sim.topo.capacity[lid] * span * (1 + 1e-9)
+    for row in tel.link_report(top=5):
+        if row["stage_share"]:
+            assert sum(row["stage_share"].values()) == pytest.approx(1.0)
+    share = tel.contended_stage_share()
+    if share:
+        assert sum(share.values()) == pytest.approx(1.0)
+
+
+# ----------------------------------------------------------- stage-log bound
+def test_stage_log_counts_drops_and_warns_once():
+    log = StageLog(maxlen=4)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        for i in range(7):
+            log.append((i, Stage.P2D, 0, 1.0, None))
+    assert len(log) == 4 and log.dropped == 3
+    assert list(log)[0][0] == 3              # oldest rows were the casualties
+    assert sum(issubclass(x.category, RuntimeWarning) for x in w) == 1
+
+
+def test_stage_log_drops_surface_in_metrics_summary():
+    trace = generate_trace(WORKLOADS["qwen-conv"], 24, rps=8.0, seed=1,
+                           warmup=4)
+    sim = ClusterSim(_spec(telemetry=None), make_policy("mfs"))
+    sim.runtime.trace_stages = True
+    sim.runtime.stage_log = StageLog(maxlen=8)   # force the bound
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        m = sim.run(trace)
+    assert m.stage_log_dropped > 0
+    assert m.summary()["stage_log_dropped"] == m.stage_log_dropped
+    # ... and stays OUT of the summary when no truncation happened
+    sim2, m2 = _run(n=12, rps=4.0)
+    assert "stage_log_dropped" not in m2.summary()
