@@ -1,0 +1,166 @@
+"""Bench regression gate: diff a fresh sweep against the committed
+artifacts and print a drift table.
+
+Two modes:
+
+``compare`` (default)
+    python -m benchmarks.bench_compare BASELINE.json FRESH.json [--quick]
+    Walks both JSON trees, pairs numeric leaves by path, and flags every
+    leaf whose drift exceeds its metric-class tolerance. Attainment-like
+    fractions compare by absolute difference; everything else by
+    relative difference. ``--quick`` widens the tolerances: the CI quick
+    sweep runs fewer requests/rates than the committed full sweep, so
+    its numbers legitimately sit off the committed ones and the gate is
+    a *drift* report, not an equality check (the CI step is
+    non-blocking either way — the table is for humans).
+
+``--sections-identical``
+    python -m benchmarks.bench_compare --sections-identical A.json B.json \
+        [--ignore yardstick ...]
+    Byte-identity check for the ``--only <arm>`` merge workflow: every
+    top-level section except the ignored ones must serialize identically
+    in both files. Automates the "all legacy sections byte-identical"
+    acceptance check that used to be done by eyeballing a diff.
+
+Exit status: 0 = within tolerance / identical, 1 = drift or divergence
+(callers decide whether that blocks; CI wires it with
+``continue-on-error``).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from typing import Any, Dict, Iterator, List, Optional, Tuple
+
+#: per-metric-class tolerances, (full, quick). Matched by substring on the
+#: leaf path; first hit wins, ``DEFAULT_TOL`` otherwise.
+ABS_CLASSES = ("attainment", "ttft", "tpot", "coverage", "hit_rate",
+               "share", "tier_mix", "slo_mix", "curves", "feasible",
+               "frac_of_ceiling", "tbt")
+TOLERANCES: Tuple[Tuple[str, float, float], ...] = (
+    ("overhead", 0.05, 0.08),      # wall-clock ratios are the noisiest
+    ("wall", float("inf"), float("inf")),   # never gate on wall-clock
+    ("attainment", 0.05, 0.20),
+    ("coverage", 0.10, 0.25),
+    ("hit_rate", 0.05, 0.15),
+    ("share", 0.10, 0.25),
+    ("ratio", 0.15, 0.40),
+    ("gain", 0.15, 0.40),
+    ("rate", 0.10, 0.30),
+    ("bytes", 0.10, 0.35),
+)
+DEFAULT_TOL = (0.10, 0.30)
+
+
+def _leaves(node: Any, path: str = "") -> Iterator[Tuple[str, Any]]:
+    if isinstance(node, dict):
+        for k in node:
+            yield from _leaves(node[k], f"{path}.{k}" if path else str(k))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from _leaves(v, f"{path}[{i}]")
+    else:
+        yield path, node
+
+
+def _tolerance(path: str, quick: bool) -> float:
+    low = path.lower()
+    for key, full, qk in TOLERANCES:
+        if key in low:
+            return qk if quick else full
+    return DEFAULT_TOL[1] if quick else DEFAULT_TOL[0]
+
+
+def _drift(path: str, a: float, b: float) -> float:
+    """Absolute drift for bounded fractions, relative otherwise."""
+    low = path.lower()
+    if any(k in low for k in ABS_CLASSES):
+        return abs(b - a)
+    return abs(b - a) / max(abs(a), 1e-12)
+
+
+def compare(baseline: Dict, fresh: Dict, quick: bool = False,
+            out=sys.stdout) -> int:
+    """Print the drift table; return the number of out-of-tolerance leaves
+    (missing/new paths are reported but don't count as drift — quick
+    sweeps legitimately drop rates/arms)."""
+    base = dict(_leaves(baseline))
+    new = dict(_leaves(fresh))
+    n_bad = n_num = 0
+    lines: List[str] = []
+    for path in sorted(base.keys() | new.keys()):
+        if path not in new:
+            lines.append(f"  - {path}: only in baseline")
+            continue
+        if path not in base:
+            lines.append(f"  + {path}: only in fresh")
+            continue
+        a, b = base[path], new[path]
+        if isinstance(a, bool) or isinstance(b, bool) \
+                or not isinstance(a, (int, float)) \
+                or not isinstance(b, (int, float)):
+            if a != b:
+                lines.append(f"  ~ {path}: {a!r} -> {b!r}")
+            continue
+        n_num += 1
+        d = _drift(path, float(a), float(b))
+        tol = _tolerance(path, quick)
+        if d > tol:
+            n_bad += 1
+            lines.append(f"  ! {path}: {a:.4g} -> {b:.4g} "
+                         f"(drift {d:.3f} > tol {tol:.3f})")
+    mode = "quick" if quick else "full"
+    print(f"bench_compare: {n_num} numeric leaves, {n_bad} over "
+          f"{mode}-sweep tolerance", file=out)
+    for ln in lines:
+        print(ln, file=out)
+    if not lines:
+        print("  (no drift, no schema changes)", file=out)
+    return n_bad
+
+
+def sections_identical(a: Dict, b: Dict, ignore: Tuple[str, ...] = (),
+                       out=sys.stdout) -> List[str]:
+    """Return the top-level sections (minus ``ignore``) that differ —
+    serialized comparison, so float formatting counts, which is exactly
+    the byte-identity the ``--only`` merge promises."""
+    diff = []
+    for key in sorted(set(a) | set(b)):
+        if key in ignore:
+            continue
+        sa = json.dumps(a.get(key), sort_keys=True)
+        sb = json.dumps(b.get(key), sort_keys=True)
+        if sa != sb:
+            diff.append(key)
+    status = "IDENTICAL" if not diff else "DIVERGED: " + ", ".join(diff)
+    print(f"bench_compare: legacy sections {status} "
+          f"(ignored: {', '.join(ignore) or 'none'})", file=out)
+    return diff
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    quick = "--quick" in argv
+    if quick:
+        argv.remove("--quick")
+    if "--sections-identical" in argv:
+        argv.remove("--sections-identical")
+        ignore: List[str] = []
+        while "--ignore" in argv:
+            i = argv.index("--ignore")
+            ignore.append(argv[i + 1])
+            del argv[i:i + 2]
+        with open(argv[0]) as fh:
+            a = json.load(fh)
+        with open(argv[1]) as fh:
+            b = json.load(fh)
+        return 1 if sections_identical(a, b, tuple(ignore)) else 0
+    with open(argv[0]) as fh:
+        baseline = json.load(fh)
+    with open(argv[1]) as fh:
+        fresh = json.load(fh)
+    return 1 if compare(baseline, fresh, quick=quick) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

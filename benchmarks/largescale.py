@@ -80,11 +80,15 @@ untouched.
 """
 from __future__ import annotations
 
+import itertools
 import json
+import sys
 import time
 from typing import Dict, List, Optional
 
-from repro.core import TelemetrySpec, make_policy
+from repro.core import (BatchState, MonitorSpec, Stage, TelemetrySpec,
+                        attainment_ceiling, disagg_bound, fixed_route_rate,
+                        make_policy)
 from repro.core.decode import DecodePoolSpec, DecodeSpec
 from repro.core.kvstore import KVStoreSpec, TierSpec
 from repro.core.router import AdmissionSpec, RouterSpec
@@ -174,6 +178,44 @@ N_CHUNK = 300
 CHUNK_LONG_TOKENS = 32768
 
 
+# ---- yardstick arm: max-flow attainment ceiling on the Mooncake tail ----
+#: same 16-unit sp cluster / tiered store / multi-tenant mix as the
+#: telemetry arm, pushed past the knee (the regime where the ceiling and
+#: the policy gap are both visible); the rate is set where the falling
+#: edge separates MFS from every baseline
+YARD_RATE = 18.0
+N_YARD = 300
+
+#: --progress: stream per-arm status lines (requests done, rolling
+#: admitted attainment from the monitor plane, ETA) to stderr
+PROGRESS = False
+
+
+def _sim(spec: ClusterSpec, policy: str, label: str = "",
+         total: int = 0) -> ClusterSim:
+    """ClusterSim factory for the sweep arms. With ``--progress`` it
+    attaches the (passive, bit-identity-tested) monitor plane and streams
+    live status lines; without it, construction is exactly the legacy
+    ``ClusterSim(spec, make_policy(policy))``."""
+    if PROGRESS and spec.monitor is None:
+        spec.monitor = MonitorSpec(sample_every=max(1, total // 8))
+    sim = ClusterSim(spec, make_policy(policy))
+    if PROGRESS and sim.monitor is not None:
+        t0 = time.time()
+
+        def _line(mon, label=label, total=total, t0=t0):
+            frac = mon.n_done / max(total, 1)
+            wall = time.time() - t0
+            eta = wall * (1.0 - frac) / max(frac, 1e-9)
+            print(f"    [{label}] {mon.n_done}/{total} done  "
+                  f"attain={mon.rolling_attainment():.3f}  "
+                  f"wall={wall:.0f}s eta={eta:.0f}s",
+                  file=sys.stderr, flush=True)
+
+        sim.monitor.on_sample = _line
+    return sim
+
+
 def _kvstore_spec(remote_cap: float = KV_REMOTE_CAP) -> KVStoreSpec:
     # per-unit tiers deliberately smaller than the per-unit working-set
     # share so all three tiers serve hits and LRU eviction is live
@@ -225,7 +267,7 @@ def _spec_decode(decode: Optional[DecodeSpec]) -> ClusterSpec:
 
 
 def _run_one(policy: str, trace, collect_stats: bool = False) -> Dict:
-    sim = ClusterSim(_spec(), make_policy(policy))
+    sim = _sim(_spec(), policy, label=f"curves.{policy}", total=len(trace))
     t0 = time.time()
     m = sim.run(trace)
     s = m.summary()
@@ -288,7 +330,8 @@ def _run_kvreuse(rows: List[str], quick: bool = False) -> Dict:
                                    seed=0, warmup=24,
                                    arrival=ArrivalSpec(process="mmpp"))
             for pol in POLICIES:
-                sim = ClusterSim(_spec_kv(kv), make_policy(pol))
+                sim = _sim(_spec_kv(kv), pol,
+                           label=f"kvreuse.{mode}.{pol}", total=len(trace))
                 t0 = time.time()
                 s = sim.run(trace).summary()
                 ttft[pol].append(s["slo_attainment"])
@@ -371,7 +414,8 @@ def _run_chunked(rows: List[str], quick: bool = False) -> Dict:
         mean: Dict[str, float] = {}
         lng: Dict[str, Dict[str, float]] = {}
         for pol in POLICIES:
-            sim = ClusterSim(_spec_chunk(on), make_policy(pol))
+            sim = _sim(_spec_chunk(on), pol,
+                       label=f"chunked.{mode}.{pol}", total=len(trace))
             t0 = time.time()
             m = sim.run(trace)
             s = m.summary()
@@ -451,8 +495,9 @@ def _run_router(rows: List[str], quick: bool = False) -> Dict:
     for rate in ROUTER_RATES:
         for router in ROUTER_POLICIES:
             for pol in ROUTER_SCHEDS:
-                sim = ClusterSim(_spec_router(RouterSpec(policy=router)),
-                                 make_policy(pol))
+                sim = _sim(_spec_router(RouterSpec(policy=router)), pol,
+                           label=f"router.{router}.{pol}",
+                           total=len(traces[rate]))
                 t0 = time.time()
                 s = sim.run(traces[rate]).summary()
                 rd["matrix"][router][pol].append(s["slo_attainment"])
@@ -525,7 +570,7 @@ def _run_telemetry(rows: List[str], quick: bool = False) -> Dict:
     for pol in POLICIES:
         spec = _spec_kv(_kvstore_spec())
         spec.telemetry = TelemetrySpec()
-        sim = ClusterSim(spec, make_policy(pol))
+        sim = _sim(spec, pol, label=f"telemetry.{pol}", total=len(trace))
         t0 = time.time()
         s = sim.run(trace).summary()
         tel = sim.telemetry
@@ -577,14 +622,167 @@ def _run_telemetry(rows: List[str], quick: bool = False) -> Dict:
     return td
 
 
+def _yardstick_demands(sim, items):
+    """Replay the stage emitter over single-item batches to measure each
+    request's expected byte demand per concrete directed link, its P2D
+    byte total, and its prefill compute seconds.
+
+    Group compute time is additive across batch items (per-item flops are
+    summed), so the single-item replay is *exact* for compute throughput
+    — no batching correction. S1 is excluded (a max-flow-optimal
+    placement gets perfect prefix affinity) and WB is excluded
+    (deferrable — it never gates TTFT); both exclusions keep the bound
+    optimistic. The replay consumes ids from the module-global flow-id
+    counter, which perturbs downstream ECMP spine hashes — the reason
+    the yardstick arm runs *last* in the sweep."""
+    emitter = sim.runtime.emitter
+    profile, topo = sim.profile, sim.topo
+    G = len(profile.plan)
+    t1 = sim.runtime._t_first_decode
+    link_bytes: Dict[int, float] = {}
+    p2d = comp = 0.0
+    n = 0
+    for i, it in enumerate(items):
+        if it.rid < 0:          # warmup is excluded from attainment
+            continue
+        n += 1
+        bs = BatchState(bid=i, unit=it.owner_unit % sim.spec.n_units,
+                        items=[it],
+                        group_time=[profile.group_compute_time([it], g)
+                                    for g in range(G)])
+        bs.p2d_pending[it.rid] = set()
+        comp += sum(bs.group_time)
+        flows = []
+        for g in range(G):
+            bs.cur_group = g
+            flows += emitter.stage3(bs, g, t1)
+            co = emitter.stage2(bs)
+            if co is not None:
+                flows += co.flows
+        for f in flows:
+            if f.stage == Stage.P2D:
+                p2d += f.size
+            for lid in topo.route(f.src, f.dst, f.fid):
+                link_bytes[lid] = link_bytes.get(lid, 0.0) + f.size
+    n = max(n, 1)
+    return ({l: b / n for l, b in link_bytes.items()}, p2d / n, comp / n)
+
+
+def _run_yardstick(rows: List[str], quick: bool = False) -> Dict:
+    """Max-flow optimality yardstick on the Mooncake tail (Helix-style).
+
+    Ports the global max-flow bound to the deployed topology: a demand
+    replay of the stage emitter gives per-request link bytes and compute
+    seconds, :func:`fixed_route_rate` bounds throughput under the
+    deployed routes, and :func:`disagg_bound` gives the routing-free
+    S -> units -> NICs -> decode-ingress -> T min-cut (compute and
+    network edges in one cut). ``attainment_ceiling`` then converts the
+    sustainable rate r* into an upper bound on TTFT attainment at the
+    offered rate — ``feasible_frac`` caps it by the fraction of requests
+    whose SLO budget even covers their ideal TTFT. Every policy's
+    attained value is reported as a fraction of that ceiling: the
+    optimality *gap*, not just the policy-vs-policy ordering. The
+    acceptance signal is MFS sitting closest to the ceiling with no
+    policy above it.
+
+    The flow-id counter is re-seeded at arm entry so the arm's ECMP
+    spine picks — and therefore its numbers — are identical whether it
+    runs standalone (``--only yardstick``) or last in the full sweep;
+    the policy runs come *before* the demand replay so the replay's id
+    consumption cannot perturb them either."""
+    import repro.core.msflow as msflow
+    msflow._flow_counter = itertools.count()
+    n = 120 if quick else N_YARD
+    trace = generate_trace(WORKLOADS[KV_WORKLOAD], n, rps=YARD_RATE, seed=0,
+                           warmup=24, arrival=ArrivalSpec(process="mmpp"))
+    yd = {"spec": KV_SPEC, "workload": KV_WORKLOAD, "sp": KV_SP,
+          "hw": KV_HW.name, "decode_ratio": KV_DECODE_RATIO,
+          "rate": YARD_RATE, "n_requests": n, "slo_mix": None,
+          "store": "on", "ceiling": {}, "attainment": {},
+          "frac_of_ceiling": {}}
+    # ---- attained, per policy (first: the replay must not shift fids) ---
+    walls: Dict[str, float] = {}
+    for pol in POLICIES:
+        sim = _sim(_spec_kv(_kvstore_spec()), pol,
+                   label=f"yardstick.{pol}", total=len(trace))
+        t0 = time.time()
+        att = sim.run(trace).slo_attainment()
+        walls[pol] = time.time() - t0
+        yd["attainment"][pol] = att
+        assert len(sim.runtime.flows) == 0, "runtime leaked flows"
+    # ---- ceiling: demand replay on a probe sim (never run) --------------
+    probe = ClusterSim(_spec_kv(_kvstore_spec()), make_policy("mfs"))
+    items = probe.build_items(trace)
+    if probe.kvstore is not None:
+        # store-aware expected reuse, exactly as fixed-mode calibration
+        entries = [(probe.kv_chain_keys(it), max(0, it.n_tokens - 1))
+                   for it in items]
+        exp = probe.kvstore.steady_state_reuse(entries)
+        for it, e in zip(items, exp):
+            it.reuse = min(int(e), max(0, it.n_tokens - 1))
+    link_bytes, p2d_bytes, comp_s = _yardstick_demands(probe, items)
+    spec = probe.spec
+    unit_rate = 1.0 / comp_s
+    compute_rate = spec.n_units * unit_rate
+    net_fixed, bottleneck = fixed_route_rate(link_bytes,
+                                             probe.topo.capacity)
+    n_dec = len(probe.runtime.emitter.decode_eps)
+    r_star = disagg_bound(
+        unit_rates=[unit_rate] * spec.n_units,
+        unit_out_caps=[spec.par.gpus * spec.hw.nic_bw] * spec.n_units,
+        out_bytes=p2d_bytes,
+        decode_in_caps=[spec.hw.nic_bw] * n_dec,
+        in_bytes=p2d_bytes)
+    # deadlines materialize at arrival; rebuild budgets from the
+    # calibrated fixed-mode base exactly as _on_arrival does
+    base = probe.runtime._slo_base
+    feasible = [1.0 if probe.profile.ideal_ttft(it)
+                <= (it.slo_scale if it.slo_scale > 0
+                    else spec.slo_scale) * base + 1e-9 else 0.0
+                for it in items if it.rid >= 0]
+    feas = sum(feasible) / max(len(feasible), 1)
+    ceiling = attainment_ceiling(YARD_RATE, r_star, feas)
+    yd["ceiling"] = {
+        "compute_rate": compute_rate,
+        "net_rate_fixed_route": net_fixed,
+        "bottleneck_link": bottleneck,
+        "rate_maxflow": r_star,
+        "feasible_frac": feas,
+        "attainment_ceiling": ceiling,
+        "per_request": {"compute_s": comp_s, "p2d_bytes": p2d_bytes,
+                        "links_touched": len(link_bytes)}}
+    emit(rows, "largescale.yardstick.ceiling", f"{ceiling:.4f}",
+         f"r*={r_star:.2f}rps (compute={compute_rate:.2f} "
+         f"fixed_route={net_fixed:.2f}) feasible={feas:.3f} "
+         f"at rps{YARD_RATE:g}")
+    for pol in POLICIES:
+        att = yd["attainment"][pol]
+        yd["frac_of_ceiling"][pol] = att / max(ceiling, 1e-9)
+        emit(rows, f"largescale.yardstick.{pol}.rps{YARD_RATE:g}",
+             f"{att:.4f}",
+             f"frac_of_ceiling={yd['frac_of_ceiling'][pol]:.3f} "
+             f"wall={walls[pol]:.0f}s")
+    best = max(yd["frac_of_ceiling"], key=lambda p: yd["frac_of_ceiling"][p])
+    yd["closest_to_ceiling"] = best
+    emit(rows, "largescale.yardstick.closest", best,
+         "smallest optimality gap: "
+         + " ".join(f"{p}:{ceiling - yd['attainment'][p]:.3f}"
+                    for p in POLICIES))
+    # the yardstick must actually be a ceiling
+    assert all(a <= ceiling + 1e-9 for a in yd["attainment"].values()), \
+        "max-flow ceiling violated by an attained value"
+    return yd
+
+
 def main(quick: bool = False, only: Optional[str] = None):
     rows: List[str] = []
-    if only in ("router", "telemetry"):
+    if only in ("router", "telemetry", "yardstick"):
         # recompute just that arm and merge it into the committed
         # artifact — every legacy section stays byte-for-byte untouched
         with open(OUT_JSON) as fh:
             result = json.load(fh)
-        arm = _run_router if only == "router" else _run_telemetry
+        arm = {"router": _run_router, "telemetry": _run_telemetry,
+               "yardstick": _run_yardstick}[only]
         result[only] = arm(rows, quick)
         with open(OUT_JSON, "w") as fh:
             json.dump(result, fh, indent=2)
@@ -623,7 +821,7 @@ def main(quick: bool = False, only: Optional[str] = None):
                            warmup=WARMUP, arrival=ArrivalSpec(process="mmpp"),
                            slo_mix=SLO_MIX)
     for pol in POLICIES:
-        sim = ClusterSim(_spec(), make_policy(pol))
+        sim = _sim(_spec(), pol, label=f"slomix.{pol}", total=len(trace))
         m = sim.run(trace)
         by_class = _per_class_attainment(
             {"ttft": m.ttft, "deadline": m.deadline}, trace)
@@ -651,8 +849,8 @@ def main(quick: bool = False, only: Optional[str] = None):
                                    arrival=ArrivalSpec(process="mmpp"),
                                    slo_mix=SLO_MIX, decode_lens=True)
             for pol in POLICIES:
-                sim = ClusterSim(_spec_decode(_decode_spec(reb)),
-                                 make_policy(pol))
+                sim = _sim(_spec_decode(_decode_spec(reb)), pol,
+                           label=f"decode.{mode}.{pol}", total=len(trace))
                 t0 = time.time()
                 s = sim.run(trace).summary()
                 ttft[pol].append(s["slo_attainment"])
@@ -690,6 +888,9 @@ def main(quick: bool = False, only: Optional[str] = None):
     result["chunked"] = _run_chunked(rows, quick)
     result["router"] = _run_router(rows, quick)
     result["telemetry"] = _run_telemetry(rows, quick)
+    # last on purpose: the yardstick's demand replay consumes flow ids,
+    # which would shift every later arm's ECMP spine picks
+    result["yardstick"] = _run_yardstick(rows, quick)
 
     with open(OUT_JSON, "w") as fh:
         json.dump(result, fh, indent=2)
@@ -698,7 +899,7 @@ def main(quick: bool = False, only: Optional[str] = None):
 
 
 if __name__ == "__main__":
-    import sys
     argv = sys.argv[1:]
     only = argv[argv.index("--only") + 1] if "--only" in argv else None
+    PROGRESS = "--progress" in argv
     main(quick="--quick" in argv, only=only)

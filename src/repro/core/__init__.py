@@ -21,6 +21,11 @@ Public surface:
     Telemetry, TelemetrySpec       — telemetry plane: lifecycle spans, RMLQ
                                      decision audit, link-contention
                                      attribution, SLO-miss root causes
+    Monitor, MonitorSpec, SignalBus — online monitor plane: streaming
+                                     estimators over the same probe sites,
+                                     live signals for detectors/routers
+    Dinic, FlowGraph, disagg_bound — max-flow optimality yardstick
+                                     (Helix-style attainment ceiling)
     MsFlowRuntime, RuntimeHost     — shared orchestration runtime (§5)
 """
 from .msflow import Stage, Flow, Coflow, FlowState, new_flow_id
@@ -53,6 +58,10 @@ from .router import (RoutingView, RouterPolicy, KVAffinityRouter,
                      RouterSpec, AdmissionSpec, AdmissionController)
 from .telemetry import (Telemetry, TelemetrySpec, StageLog, FlowSpan,
                         RequestTrace, link_name)
+from .monitor import (Monitor, MonitorSpec, SignalBus, FixedBinSketch,
+                      RollingWindow, ProbeFanout)
+from .maxflow import (Dinic, FlowGraph, fixed_route_rate, disagg_bound,
+                      attainment_ceiling)
 from .runtime import MsFlowRuntime, RuntimeHost, RuntimeView
 
 __all__ = [
@@ -77,5 +86,9 @@ __all__ = [
     "RouterSpec", "AdmissionSpec", "AdmissionController",
     "Telemetry", "TelemetrySpec", "StageLog", "FlowSpan", "RequestTrace",
     "link_name",
+    "Monitor", "MonitorSpec", "SignalBus", "FixedBinSketch", "RollingWindow",
+    "ProbeFanout",
+    "Dinic", "FlowGraph", "fixed_route_rate", "disagg_bound",
+    "attainment_ceiling",
     "MsFlowRuntime", "RuntimeHost", "RuntimeView",
 ]

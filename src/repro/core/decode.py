@@ -367,6 +367,9 @@ class DecodePlane:
         self._log("finish", sess.rid, sess.ep, now, sess.tokens_done)
         if self.rt is not None:
             self.rt.host.on_decode_done(sess)
+            mon = getattr(self.rt, "monitor", None)
+            if mon is not None:
+                mon.on_decode_finished(sess, now)
         self._drain_queue(sess.pool, sess.ep, now)
 
     def _drain_queue(self, pool: str, ep: int, now: float) -> None:

@@ -146,6 +146,13 @@ class RouterPolicy:
     def place(self, item: Any, view: RoutingView) -> int:
         raise NotImplementedError
 
+    def attach_bus(self, bus: Any) -> None:
+        """Monitor-plane hook: called once when a ``SignalBus`` is live
+        (``ClusterSpec.monitor`` / ``DisaggConfig.monitor`` set). Policies
+        that score on streaming signals (rolling link contention, TTFT
+        quantiles, laxity debt — ``bus.read(name, key)``) override this;
+        the base class ignores it so existing routers are bus-agnostic."""
+
     def reset(self) -> None:
         """Clear cross-run state (routers are rebuilt per host, but the
         registry contract mirrors ``Policy.reset`` for reuse)."""
@@ -296,9 +303,20 @@ class OverloadDetector:
     Implementations trip when their signal crosses ``high`` and recover
     only once it falls back to ``low`` (two watermarks, so a burst cannot
     flap admission on and off every request).
+
+    With the monitor plane attached the runtime calls :meth:`attach_bus`,
+    and detectors read their signal from the ``SignalBus`` instead of
+    computing it in-detector. The bus providers are the *same expressions*
+    registered as live-view closures (``Monitor.bind_live``), so trip and
+    recovery happen at byte-identical times either way (regression-tested
+    in ``tests/test_monitor.py``) — the migration buys a shared namespace
+    (new detectors subscribe to any signal by name), not new numbers.
     """
 
     name = "base"
+    #: bus signal this detector reads when attached (None = in-detector
+    #: computation only; subclasses set or compute it)
+    bus_signal: Optional[str] = None
 
     def __init__(self, high: float, low: float):
         if low > high:
@@ -308,6 +326,13 @@ class OverloadDetector:
         self.low = low
         self.tripped = False
         self.n_trips = 0
+        self.bus: Any = None
+
+    def attach_bus(self, bus: Any) -> None:
+        """Subscribe to the monitor's SignalBus: subsequent ``signal()``
+        calls read ``bus_signal`` from the bus when it carries it."""
+        if self.bus_signal is not None and bus.has(self.bus_signal):
+            self.bus = bus
 
     def signal(self, view: RoutingView, unit: int) -> float:
         raise NotImplementedError
@@ -346,8 +371,14 @@ class QueueDepthDetector(OverloadDetector):
                              f"got {scope!r}")
         self._signal = signal
         self.scope = scope
+        self.bus_signal = f"queue.{signal}.{scope}"
 
     def signal(self, view: RoutingView, unit: int) -> float:
+        if self.bus is not None:
+            # bus-backed: the provider is the same expression as below,
+            # registered by Monitor.bind_live — byte-identical trip points
+            return self.bus.read(self.bus_signal,
+                                 unit if self.scope == "unit" else None)
         if self._signal == "requests":
             if self.scope == "unit":
                 return float(view.queued(unit))
@@ -367,11 +398,15 @@ class LaxityDebtDetector(OverloadDetector):
     seconds of aggregate debt."""
 
     name = "laxity_debt"
+    bus_signal = "laxity.debt"
 
     def __init__(self, high: float = 2.0, low: float = 0.5):
         super().__init__(high, low)
 
     def signal(self, view: RoutingView, unit: int) -> float:
+        if self.bus is not None:
+            # bus-backed: Monitor.bind_live registers this exact summation
+            return self.bus.read(self.bus_signal)
         now = view.now
         debt = 0.0
         for u in range(view.n_units):

@@ -51,6 +51,7 @@ import numpy as np
 
 from .arbiter import MFSScheduler
 from .feasibility import BatchLoad, inter_request_schedule
+from .monitor import Monitor, ProbeFanout
 from .msflow import Coflow, Flow, FlowState, Stage
 from .policies import Policy
 from .router import (AdmissionController, KVAffinityRouter, RouterPolicy,
@@ -192,7 +193,8 @@ class MsFlowRuntime:
                  decode=None, kvstore=None,
                  router: Optional[RouterPolicy] = None,
                  admission: Optional[AdmissionController] = None,
-                 telemetry: Optional[Telemetry] = None):
+                 telemetry: Optional[Telemetry] = None,
+                 monitor: Optional[Monitor] = None):
         self.topo = topo
         self.net = net
         self.evq = evq
@@ -272,6 +274,24 @@ class MsFlowRuntime:
                            t_first_decode=self._t_first_decode)
             if isinstance(policy, MFSScheduler):
                 policy.attach_telemetry(telemetry)
+        #: online monitor plane (repro.core.monitor) — streaming estimators
+        #: over the SAME probe surface; like telemetry, a pure observer, and
+        #: its SignalBus feeds detectors/routers the bit-identical values
+        #: they used to compute in-line
+        self.monitor = monitor
+        if monitor is not None:
+            monitor.bind(lambda: self.net.now, topo,
+                         t_first_decode=self._t_first_decode)
+            monitor.bind_live(self.routing_view)
+            self.router.attach_bus(monitor.bus)
+            if self.admission is not None:
+                self.admission.detector.attach_bus(monitor.bus)
+        #: single probe target — telemetry, monitor, a fanout over both, or
+        #: None; every probe site stays ONE falsy check
+        if telemetry is not None and monitor is not None:
+            self._probe = ProbeFanout(telemetry, monitor)
+        else:
+            self._probe = telemetry if telemetry is not None else monitor
 
     # ---------------------------------------------------------- calibration
     def calibrate_slo(self, items: Sequence[PrefillItem]) -> None:
@@ -318,10 +338,10 @@ class MsFlowRuntime:
             flow.state = FlowState.PRUNED
         self.policy.on_flow_submitted(flow, self.view)
         self.submit_level[flow.fid] = flow.level
-        if self.telemetry is not None:
-            # with telemetry on, the legacy stage log is backed by the same
-            # probe (one append site, identical rows)
-            self.telemetry.flow_submitted(
+        if self._probe is not None:
+            # with telemetry/monitor on, the legacy stage log is backed by
+            # the same probe (one append site, identical rows)
+            self._probe.flow_submitted(
                 flow, self.stage_log if self.trace_stages else None)
         elif self.trace_stages:
             self.stage_log.append((flow.rid, flow.stage, flow.target_layer,
@@ -371,8 +391,8 @@ class MsFlowRuntime:
             self.batch_of_request[it.rid] = bs
             bs.p2d_pending[it.rid] = set()
         self.host.on_batch_started(bs)
-        if self.telemetry is not None:
-            self.telemetry.on_batch_started(bs)
+        if self._probe is not None:
+            self._probe.on_batch_started(bs)
         for f in self.emitter.stage1(bs):
             self._submit(f)
         if self.policy.uses_inter_request:
@@ -413,8 +433,8 @@ class MsFlowRuntime:
         else:
             dur = bs.chunk_time[g][c] \
                 + (self._recompute_penalty(bs, g) if c == 0 else 0.0)
-        if self.telemetry is not None:
-            self.telemetry.compute_open(bs, g, c)
+        if self._probe is not None:
+            self._probe.compute_open(bs, g, c)
         self.evq.push(self.net.now + dur, "compute", (bs.bid, bs.unit, g, c))
 
     def _recompute_penalty(self, bs: BatchState, g: int) -> float:
@@ -455,8 +475,8 @@ class MsFlowRuntime:
     def _evict_flow(self, f: Flow) -> None:
         """Drop a finished/cancelled flow from runtime state, folding its
         promotion outcome into the compact per-stage counters first."""
-        if self.telemetry is not None:
-            self.telemetry.flow_closed(f, self.net)
+        if self._probe is not None:
+            self._probe.flow_closed(f, self.net)
         self.flows.pop(f.fid, None)
         lvl0 = self.submit_level.pop(f.fid, None)
         if lvl0 is not None and f.level < lvl0:
@@ -492,8 +512,8 @@ class MsFlowRuntime:
         if item.owner_unit < 0:
             item.owner_unit = u             # no-owner sentinel: self-owned
         item.unit = u
-        if self.telemetry is not None:
-            self.telemetry.on_arrival(item, u)
+        if self._probe is not None:
+            self._probe.on_arrival(item, u)
         if self.decode is not None and not item.pool:
             item.pool = self.decode.pick_pool(item)
         item.ideal_ttft = self.profile.ideal_ttft(item)
@@ -524,21 +544,21 @@ class MsFlowRuntime:
                     item.deferrals += 1
                     self.n_deferred += 1
                     self.host.on_deferred(item)
-                    if self.telemetry is not None:
-                        self.telemetry.on_deferred(item)
+                    if self._probe is not None:
+                        self._probe.on_deferred(item)
                     self.evq.push(self.net.now + self.admission.spec.defer_delay,
                                   "arr", item)
                 else:
                     self.n_shed += 1
                     self.host.on_shed(item)
-                    if self.telemetry is not None:
-                        self.telemetry.on_shed(item)
+                    if self._probe is not None:
+                        self._probe.on_shed(item)
                 return
         self.queues[u].append(item)
         self.backlog_tokens[u] += item.n_tokens
         self.host.on_admitted(item)
-        if self.telemetry is not None:
-            self.telemetry.on_admitted(item)
+        if self._probe is not None:
+            self._probe.on_admitted(item)
         self._maybe_start_batch(u)
 
     def _on_compute_done(self, bid: int, unit: int, g: int, c: int = 0) -> None:
@@ -546,8 +566,8 @@ class MsFlowRuntime:
         if bs is None or bs.bid != bid or bs.cur_group != g \
                 or bs.cur_chunk != c or bs.phase != "compute":
             return   # stale
-        if self.telemetry is not None:
-            self.telemetry.compute_close(unit)
+        if self._probe is not None:
+            self._probe.compute_close(unit)
         if bs.chunk_plan is None:
             for f in self.emitter.stage3(bs, g, self._t_first_decode):
                 self._submit(f)
@@ -615,8 +635,8 @@ class MsFlowRuntime:
         self.red_ranks.pop(item.rid, None)
         self.pruned_rids.discard(item.rid)
         self.host.on_request_done(item, bs)
-        if self.telemetry is not None:
-            self.telemetry.on_request_done(item, bs)
+        if self._probe is not None:
+            self._probe.on_request_done(item, bs)
         if self.kvstore is not None:
             # KV-reuse plane admission: the chain's blocks are registered in
             # the origin tier and loose-deadline Stage-WB replication flows
@@ -665,8 +685,8 @@ class MsFlowRuntime:
             if bs is not None and bs.coll is not None and f.coflow == bs.coll.cid:
                 if bs.coll.done():
                     bs.coll.finished = self.net.now
-                    if self.telemetry is not None:
-                        self.telemetry.coll_wait(
+                    if self._probe is not None:
+                        self._probe.coll_wait(
                             bs.bid, self.net.now - bs.coll_started)
                     co = bs.coll
                     self.host.on_coflow_done(bs, co, self._coflow_ideal(co))
@@ -766,8 +786,8 @@ class MsFlowRuntime:
                                        drop_budget=budget_left)
         rank_of_batch = {bid: i for i, bid in enumerate(sched.order)}
         newly_pruned = {rid for (_, rid) in sched.pruned}
-        if self.telemetry is not None:
-            self.telemetry.red_run(sched.order, newly_pruned, len(batches))
+        if self._probe is not None:
+            self._probe.red_run(sched.order, newly_pruned, len(batches))
         for bs in self.active_batch.values():
             for it in bs.items:
                 self.red_ranks[it.rid] = rank_of_batch.get(bs.bid, 0)
@@ -778,15 +798,15 @@ class MsFlowRuntime:
                     self.pruned_rids.add(it.rid)
                     self.ever_pruned.add(it.rid)
                     self.n_pruned += 1
-                    if self.telemetry is not None:
-                        self.telemetry.on_pruned(it.rid)
+                    if self._probe is not None:
+                        self._probe.on_pruned(it.rid)
                     self._apply_prune(bs, it)
         # re-admission: requests no longer in the pruned set
         for rid in list(self.pruned_rids):
             if rid not in newly_pruned and rid in self.batch_of_request:
                 self.pruned_rids.discard(rid)
-                if self.telemetry is not None:
-                    self.telemetry.on_readmitted(rid)
+                if self._probe is not None:
+                    self._probe.on_readmitted(rid)
                 for f in self.net.flows.values():
                     if f.rid == rid and f.state == FlowState.PRUNED:
                         f.state = FlowState.ACTIVE
@@ -817,10 +837,10 @@ class MsFlowRuntime:
                 break
             t, kind, payload, epoch = popped
             n_ev += 1
-            if self.telemetry is not None:
+            if self._probe is not None:
                 # BEFORE advance: current rates are exactly the rates active
                 # over [net.now, t], so span/link integration here is exact
-                self.telemetry.on_advance(self.net, t)
+                self._probe.on_advance(self.net, t)
             done = self.net.advance(t)
             for f in done:
                 self._on_flow_done(f)

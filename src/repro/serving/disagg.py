@@ -56,6 +56,7 @@ from ..core.router import AdmissionSpec, RouterSpec
 from ..core.runtime import MsFlowRuntime, RuntimeHost
 from ..core.stages import (BatchState, ChunkSpec, GroupPlan, ParallelismSpec,
                            PrefillItem, StageEmitter, StageProfile)
+from ..core.monitor import Monitor, MonitorSpec
 from ..core.telemetry import Telemetry, TelemetrySpec
 from ..netsim.events import EventQueue
 from ..netsim.fluid import FluidNet
@@ -132,6 +133,9 @@ class DisaggConfig:
     # ``DisaggServer.telemetry`` after a run for ttft_breakdown /
     # slo_miss_report / the RMLQ audit / Chrome trace export
     telemetry: Optional[TelemetrySpec] = None
+    # online monitor plane (None = off): streaming estimators + SignalBus
+    # for live detectors/routers; read via ``DisaggServer.monitor``
+    monitor: Optional[MonitorSpec] = None
 
     def chunk_tokens(self) -> int:
         return self.chunk.chunk_tokens if self.chunk is not None else 0
@@ -207,6 +211,9 @@ class DisaggServer(RuntimeHost):
         self.telemetry: Optional[Telemetry] = \
             Telemetry(cfg.telemetry) if cfg.telemetry is not None \
             and cfg.telemetry.enabled else None
+        self.monitor: Optional[Monitor] = \
+            Monitor(cfg.monitor) if cfg.monitor is not None \
+            and cfg.monitor.enabled else None
         self.runtime = MsFlowRuntime(
             self.topo, FluidNet(self.topo), EventQueue(), self.policy,
             self.profile, emitter, host=self, n_units=cfg.n_prefill_units,
@@ -216,7 +223,7 @@ class DisaggServer(RuntimeHost):
             kvstore=self.kvstore,
             router=rspec.build() if rspec is not None else None,
             admission=rspec.build_admission() if rspec is not None else None,
-            telemetry=self.telemetry)
+            telemetry=self.telemetry, monitor=self.monitor)
 
         self.engines = [ServingEngine(model, params)
                         for _ in range(cfg.n_prefill_units)]

@@ -39,6 +39,7 @@ from ..core.router import AdmissionSpec, RouterSpec
 from ..core.runtime import MsFlowRuntime, RuntimeHost
 from ..core.stages import (BatchState, ChunkSpec, GroupPlan, ParallelismSpec,
                            PrefillItem, StageEmitter, StageProfile)
+from ..core.monitor import Monitor, MonitorSpec
 from ..core.telemetry import Telemetry, TelemetrySpec
 from ..netsim import EventQueue, FatTree, FluidNet, SingleToR, Topology
 from .hw import HW, A100
@@ -47,7 +48,7 @@ from .trace import Request
 
 __all__ = ["ParallelismSpec", "ClusterSpec", "ClusterSim", "ChunkSpec",
            "DecodeSpec", "KVStoreSpec", "RouterSpec", "AdmissionSpec",
-           "TelemetrySpec"]
+           "TelemetrySpec", "MonitorSpec"]
 
 
 @dataclass
@@ -96,6 +97,12 @@ class ClusterSpec:
     # them via ``ClusterSim.telemetry`` (ttft_breakdown / slo_miss_report /
     # link_report / to_chrome_trace).
     telemetry: Optional[TelemetrySpec] = None
+    # online monitor plane (None = off, zero-overhead like telemetry). With
+    # a spec attached the runtime streams event-clock estimators — rolling
+    # link utilization/contended share, slack-loss rates, TTFT/TPOT
+    # quantile sketches — onto a SignalBus that overload detectors and
+    # router policies read live; see ``ClusterSim.monitor``.
+    monitor: Optional[MonitorSpec] = None
 
     def chunk_tokens(self) -> int:
         return self.chunk.chunk_tokens if self.chunk is not None else 0
@@ -167,6 +174,9 @@ class ClusterSim(RuntimeHost):
         self.telemetry: Optional[Telemetry] = \
             Telemetry(spec.telemetry) if spec.telemetry is not None \
             and spec.telemetry.enabled else None
+        self.monitor: Optional[Monitor] = \
+            Monitor(spec.monitor) if spec.monitor is not None \
+            and spec.monitor.enabled else None
         self.runtime = MsFlowRuntime(
             self.topo, FluidNet(self.topo), EventQueue(), policy,
             self.profile, emitter, host=self, n_units=spec.n_units,
@@ -176,7 +186,7 @@ class ClusterSim(RuntimeHost):
             decode=self.decode_plane, kvstore=self.kvstore,
             router=rspec.build() if rspec is not None else None,
             admission=rspec.build_admission() if rspec is not None else None,
-            telemetry=self.telemetry)
+            telemetry=self.telemetry, monitor=self.monitor)
         self.metrics = SimMetrics(policy=policy.name)
 
     # kept as properties so tooling (and tests) can poke at the shared state
@@ -255,7 +265,11 @@ class ClusterSim(RuntimeHost):
         self.metrics.tpot_budget[sess.rid] = sess.tpot_budget
 
     # ------------------------------------------------------------------ run
-    def run(self, requests: Sequence[Request], max_events: int = 5_000_000) -> SimMetrics:
+    def build_items(self, requests: Sequence[Request]) -> List[PrefillItem]:
+        """Trace requests -> runtime items (the exact objects ``run()``
+        pushes), with SLO calibration applied. Exposed so offline analyses
+        — e.g. the max-flow yardstick's demand replay — see the same
+        deadlines/reuse the live run would."""
         import copy
         items: List[PrefillItem] = []
         for r in requests:
@@ -273,6 +287,10 @@ class ClusterSim(RuntimeHost):
                 slo_class=getattr(r, "slo_class", "standard"),
                 out_tokens=getattr(r, "out_len", 0), payload=r))
         self.runtime.calibrate_slo(items)
+        return items
+
+    def run(self, requests: Sequence[Request], max_events: int = 5_000_000) -> SimMetrics:
+        items = self.build_items(requests)
         for it in items:
             self.runtime.push_arrival(it)
         self.runtime.run(max_events=max_events)

@@ -1,0 +1,335 @@
+"""Online monitor plane: monitor-on vs monitor-off bit-identity (the
+zero-overhead guard, mirroring the telemetry plane's), quantile-sketch
+determinism (order/host independence + bin-tolerance accuracy), rolling
+trailing-window semantics, byte-identical trip/recover parity of the
+bus-migrated ``queue_depth``/``laxity_debt`` detectors against the legacy
+in-detector computation, ProbeFanout single-append stage-log semantics,
+live-signal sanity and the ``--progress`` sampling hook."""
+import math
+from types import SimpleNamespace
+
+import pytest
+
+from repro.core import make_policy
+from repro.core.monitor import (FixedBinSketch, Monitor, MonitorSpec,
+                                ProbeFanout, RollingWindow, SignalBus)
+from repro.core.router import (AdmissionSpec, LaxityDebtDetector,
+                               QueueDepthDetector, RouterSpec)
+from repro.core.telemetry import TelemetrySpec
+from repro.simcluster.papermodels import PAPER_MODELS
+from repro.simcluster.sim import ClusterSim, ClusterSpec, ParallelismSpec
+from repro.simcluster.trace import WORKLOADS, generate_trace
+
+
+def _spec(**kw):
+    kw.setdefault("par", ParallelismSpec(mode="ep", ep=8))
+    kw.setdefault("n_units", 2)
+    return ClusterSpec(model=PAPER_MODELS["mixtral-8x7b"], **kw)
+
+
+def _trace(n=40, rps=10.0, seed=0, workload="qwen-conv", **kw):
+    return generate_trace(WORKLOADS[workload], n, rps=rps, seed=seed,
+                          warmup=8, **kw)
+
+
+def _run(spec, policy="mfs", trace=None, seed=0):
+    trace = trace if trace is not None else _trace(seed=seed)
+    sim = ClusterSim(spec, make_policy(policy), seed=seed)
+    m = sim.run(trace)
+    return sim, m
+
+
+# ----------------------------------------------------------- bit-identity
+@pytest.mark.parametrize("policy", ["mfs", "sjf"])
+def test_monitor_on_vs_off_bit_identical(policy):
+    """The monitor is a pure observer: enabling it must not move a single
+    float anywhere in the run (exact equality, not approx)."""
+    trace = _trace()
+    _, m0 = _run(_spec(), policy, trace)
+    sim1, m1 = _run(_spec(monitor=MonitorSpec()), policy, trace)
+    assert m0.ttft == m1.ttft
+    assert m0.deadline == m1.deadline
+    assert m0.stall_time == m1.stall_time
+    assert m0.summary() == m1.summary()
+    assert sim1.monitor is not None and sim1.monitor.n_done == len(m1.ttft)
+
+
+def test_monitor_plus_telemetry_bit_identical_and_single_stage_log():
+    """Telemetry + monitor together (ProbeFanout): still bit-identical, and
+    the legacy stage log is appended exactly once per flow — identical rows
+    to a telemetry-only run."""
+    trace = _trace()
+    sim0 = ClusterSim(_spec(telemetry=TelemetrySpec()), make_policy("mfs"))
+    sim0.runtime.trace_stages = True
+    m0 = sim0.run(trace)
+    sim1 = ClusterSim(_spec(telemetry=TelemetrySpec(),
+                            monitor=MonitorSpec()), make_policy("mfs"))
+    sim1.runtime.trace_stages = True
+    m1 = sim1.run(trace)
+    assert isinstance(sim1.runtime._probe, ProbeFanout)
+    assert m0.ttft == m1.ttft and m0.summary() == m1.summary()
+    assert list(sim0.runtime.stage_log) == list(sim1.runtime.stage_log)
+    # ...and the monitor saw every one of those submits
+    assert sum(sim1.monitor.stage_submitted.values()) \
+        == len(sim1.telemetry.flow_spans)
+
+
+def test_monitor_only_backs_the_stage_log():
+    """Monitor without telemetry: trace_stages output must not depend on
+    which collector backs the append site."""
+    trace = _trace()
+    sim0 = ClusterSim(_spec(), make_policy("mfs"))
+    sim0.runtime.trace_stages = True
+    sim0.run(trace)
+    sim1 = ClusterSim(_spec(monitor=MonitorSpec()), make_policy("mfs"))
+    sim1.runtime.trace_stages = True
+    sim1.run(trace)
+    assert list(sim0.runtime.stage_log) == list(sim1.runtime.stage_log)
+
+
+# ------------------------------------------------------------ the sketch
+def test_sketch_is_order_independent_and_host_parity_exact():
+    """Same multiset of observations, any order, any instance: identical
+    counts and bit-identical quantiles (no RNG, no merge error)."""
+    vals = [0.001 * (i % 97 + 1) * (1.7 ** (i % 11)) for i in range(500)]
+    a, b = FixedBinSketch(), FixedBinSketch()
+    for v in vals:
+        a.observe(v)
+    for v in reversed(vals):
+        b.observe(v)
+    assert a.counts == b.counts and a.n == b.n == len(vals)
+    for q in (0.0, 0.5, 0.9, 0.99, 1.0):
+        qa, qb = a.quantile(q), b.quantile(q)
+        assert qa == qb                       # exact, not approx
+    # edges are a pure function of (lo, hi, bins)
+    assert a.edges == FixedBinSketch().edges
+
+
+def test_sketch_quantiles_within_one_bin_of_truth():
+    """The reported quantile is the upper edge of the true value's bin:
+    conservative, and within one log-spaced bin ratio of the truth."""
+    vals = sorted(0.002 * 1.013 ** i for i in range(400))
+    sk = FixedBinSketch(lo=1e-4, hi=1e3, bins=256)
+    for v in vals:
+        sk.observe(v)
+    ratio = (sk.hi / sk.lo) ** (1.0 / 256)
+    for q in (0.1, 0.5, 0.9, 0.99):
+        true = vals[min(len(vals) - 1, int(q * len(vals)))]
+        est = sk.quantile(q)
+        assert true <= est <= true * ratio * (1 + 1e-9)
+
+
+def test_sketch_edge_cases():
+    sk = FixedBinSketch()
+    assert math.isnan(sk.quantile(0.5))       # empty
+    sk.observe(0.0)                           # below lo: clamps to bin 0
+    sk.observe(1e9)                           # above hi: clamps to last bin
+    assert sk.quantile(0.0) == sk.edges[0] and sk.quantile(1.0) == sk.hi
+    with pytest.raises(ValueError):
+        FixedBinSketch(lo=0.0)
+    with pytest.raises(ValueError):
+        FixedBinSketch(lo=1.0, hi=0.5)
+
+
+# ---------------------------------------------------------- rolling window
+def test_rolling_window_expires_exactly():
+    w = RollingWindow(window=1.0, buckets=4)   # bucket_dt = 0.25
+    w.add(0.0, 1.0)
+    w.add(0.5, 2.0)
+    assert w.sum(0.5) == 3.0
+    # bucket [0, 0.25) expires once t - window >= 0.25
+    assert w.sum(1.2) == 3.0
+    assert w.sum(1.25) == 2.0
+    assert w.sum(2.5) == 0.0
+    w.add(3.0, 4.0)
+    assert w.rate(3.0) == 4.0 / 1.0
+
+
+# ------------------------------------------------------------------ the bus
+def test_bus_read_unknown_signal_raises_with_names():
+    bus = SignalBus()
+    bus.register("a.b", lambda key: 1.0, "help")
+    assert bus.has("a.b") and bus.read("a.b") == 1.0
+    assert bus.describe()["a.b"] == "help"
+    with pytest.raises(KeyError, match="a.b"):
+        bus.read("nope")
+
+
+# ----------------------------------------------- detector bus migration
+class _FakeView:
+    def __init__(self, backlogs=(0.0, 0.0), queued=(0, 0), now=0.0,
+                 items=None):
+        self.backlogs = list(backlogs)
+        self._queued = list(queued)
+        self.now = now
+        self._items = items or [[] for _ in self.backlogs]
+
+    @property
+    def n_units(self):
+        return len(self.backlogs)
+
+    def queued(self, unit):
+        return self._queued[unit]
+
+    def queued_items(self, unit):
+        return iter(self._items[unit])
+
+    def total_queued(self):
+        return sum(self._queued)
+
+
+def test_detectors_read_bus_byte_identically():
+    """A bus-attached detector must return the exact float the legacy
+    in-detector expression computes, for every scope/signal variant."""
+    items = [[SimpleNamespace(ideal_ttft=0.5, deadline=0.3),
+              SimpleNamespace(ideal_ttft=0.1, deadline=5.0)],
+             [SimpleNamespace(ideal_ttft=1.0, deadline=0.25)]]
+    view = _FakeView(backlogs=(123.0, 45.0), queued=(2, 1), now=1.0,
+                     items=items)
+    mon = Monitor(MonitorSpec())
+    mon.bind(lambda: view.now, topo=None)
+    mon.bind_live(view)
+    for kw in (dict(signal="requests", scope="cluster"),
+               dict(signal="requests", scope="unit"),
+               dict(signal="tokens", scope="cluster"),
+               dict(signal="tokens", scope="unit")):
+        legacy = QueueDepthDetector(**kw)
+        bused = QueueDepthDetector(**kw)
+        bused.attach_bus(mon.bus)
+        assert bused.bus is mon.bus
+        for u in range(view.n_units):
+            assert bused.signal(view, u) == legacy.signal(view, u)
+    legacy, bused = LaxityDebtDetector(), LaxityDebtDetector()
+    bused.attach_bus(mon.bus)
+    assert bused.signal(view, 0) == legacy.signal(view, 0) \
+        == max(0.0, 1.0 + 0.5 - 0.3) + max(0.0, 1.0 + 1.0 - 0.25)
+
+
+def test_attach_bus_is_a_noop_without_the_signal():
+    """Detectors only migrate when the bus actually carries their signal —
+    an empty bus (no bind_live) leaves the legacy path in place."""
+    det = QueueDepthDetector()
+    det.attach_bus(SignalBus())
+    assert det.bus is None
+    view = _FakeView(queued=(3, 4))
+    assert det.signal(view, 0) == 7.0
+
+
+def _trip_log(sim):
+    """Record every (now, tripped) detector decision, any detector type."""
+    det = sim.runtime.admission.detector
+    log = []
+    orig = det.update
+
+    def update(view, unit):
+        out = orig(view, unit)
+        log.append((view.now, out))
+        return out
+
+    det.update = update
+    return log
+
+
+def test_migrated_detector_trips_at_byte_identical_times():
+    """End-to-end: an admission run with the monitor attached (detector on
+    the bus) must shed/defer the same requests and flip the detector at
+    byte-identical event times as the legacy in-detector computation."""
+    from repro.simcluster.trace import ArrivalSpec
+
+    trace = _trace(n=72, rps=56.0, seed=7,
+                   arrival=ArrivalSpec(process="mmpp", burst_factor=8.0,
+                                       burst_frac=0.15, dwell=2.0),
+                   slo_mix={"tight": 0.2, "standard": 0.4, "loose": 0.4})
+    adm = AdmissionSpec(detector="queue_depth",
+                        detector_kw=dict(high=10, low=3))
+    sim0 = ClusterSim(_spec(router=RouterSpec(admission=adm)),
+                      make_policy("mfs"))
+    log0 = _trip_log(sim0)
+    m0 = sim0.run(trace)
+    sim1 = ClusterSim(_spec(router=RouterSpec(admission=adm),
+                            monitor=MonitorSpec()), make_policy("mfs"))
+    log1 = _trip_log(sim1)
+    m1 = sim1.run(trace)
+    assert sim1.runtime.admission.detector.bus is sim1.monitor.bus
+    assert m0.shed and log0 == log1           # byte-identical decisions
+    assert m0.shed == m1.shed and m0.ttft == m1.ttft
+    assert m0.summary() == m1.summary()
+    assert sim1.monitor.n_shed == len(m1.shed)
+
+
+def test_migrated_laxity_detector_trips_at_byte_identical_times():
+    trace = _trace(n=60, rps=48.0, seed=3,
+                   slo_mix={"tight": 0.2, "standard": 0.4, "loose": 0.4})
+    adm = AdmissionSpec(detector="laxity_debt",
+                        detector_kw=dict(high=0.4, low=0.1))
+    sim0 = ClusterSim(_spec(router=RouterSpec(admission=adm)),
+                      make_policy("mfs"))
+    log0 = _trip_log(sim0)
+    m0 = sim0.run(trace)
+    sim1 = ClusterSim(_spec(router=RouterSpec(admission=adm),
+                            monitor=MonitorSpec()), make_policy("mfs"))
+    log1 = _trip_log(sim1)
+    m1 = sim1.run(trace)
+    assert log0 == log1
+    assert m0.summary() == m1.summary()
+
+
+# ------------------------------------------------------------ live signals
+def test_streaming_signals_are_sane_after_a_run():
+    sim, m = _run(_spec(monitor=MonitorSpec()))
+    mon = sim.monitor
+    assert mon.n_done == len(m.ttft) and mon.n_admitted == len(m.ttft)
+    att = mon.bus.read("slo.attainment.cum")
+    assert att == pytest.approx(m.admitted_attainment())
+    assert 0.0 <= mon.rolling_attainment() <= 1.0
+    p50 = mon.bus.read("ttft.p50", "all")
+    p99 = mon.bus.read("ttft.p99", "all")
+    assert 0.0 < p50 <= p99
+    # the conservative sketch bound brackets the true percentile
+    import numpy as np
+    true_p50 = float(np.percentile(list(m.ttft.values()), 50))
+    ratio = (mon.spec.sketch_hi / mon.spec.sketch_lo) \
+        ** (1.0 / mon.spec.sketch_bins)
+    assert true_p50 <= p50 * (1 + 1e-9) and p50 <= true_p50 * ratio * 1.01
+    assert mon.stage_submitted.get("P2D", 0) > 0
+    # per-link rolling utilization lands in [0, 1]
+    for lid in range(len(sim.topo.capacity)):
+        u = mon.bus.read("link.util", lid)
+        c = mon.bus.read("link.contended_share", lid)
+        assert 0.0 <= u <= 1.0 + 1e-9 and 0.0 <= c <= 1.0 + 1e-9
+    snap = mon.snapshot()
+    assert snap["n_done"] == mon.n_done and snap["t"] > 0.0
+
+
+def test_tpot_sketch_fills_with_a_decode_plane():
+    from repro.core.decode import DecodePoolSpec, DecodeSpec
+
+    trace = _trace(n=32, rps=8.0, seed=1, workload="qwen-agent",
+                   decode_lens=True)
+    spec = _spec(decode=DecodeSpec(pools=(DecodePoolSpec(
+        name="default", slots_per_ep=8),), mean_out=24),
+        monitor=MonitorSpec())
+    sim, m = _run(spec, trace=trace)
+    mon = sim.monitor
+    assert m.tpot and mon.tpot_sketch["all"].n > 0
+    p90 = mon.bus.read("tpot.p90", "all")
+    assert p90 > 0.0 and not math.isnan(p90)
+
+
+def test_progress_sampling_hook_fires():
+    spec = _spec(monitor=MonitorSpec(sample_every=5))
+    sim = ClusterSim(spec, make_policy("mfs"))
+    seen = []
+    sim.monitor.on_sample = lambda mon: seen.append(mon.n_done)
+    m = sim.run(_trace())
+    assert seen and seen == [5 * (i + 1) for i in range(len(seen))]
+    assert len(seen) == len(m.ttft) // 5
+
+
+def test_serving_path_threads_the_monitor():
+    """DisaggConfig.monitor reaches the shared runtime on the serving host
+    too (config threading, not a full serve run)."""
+    from repro.serving.disagg import DisaggConfig
+    import dataclasses
+    fields = {f.name for f in dataclasses.fields(DisaggConfig)}
+    assert "monitor" in fields
